@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, CSV output, CPU-scaled sizes.
+
+The paper's GPU sizes (up to 1M points) are CPU-scaled here; every harness
+takes ``--scale`` so the same code reproduces the paper's exact sweep on
+real hardware.  Timings use best-of-k wall clock around block_until_ready.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Best-of-k wall-clock seconds (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, **fields):
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{name},{kv}")

@@ -1,0 +1,45 @@
+"""Fig. 4 reproduction: fused vs non-fused Laplace-correction runtime.
+
+The non-fused baseline runs TWO quadratic passes (plain KDE + the squared-
+moment pass, recomputing distances); the fused kernel applies the Laplace
+factor inside the single pass.  The speedup ratio is the fusion win; the
+Flash-SD-KDE / Flash-Laplace ratio is also reported for context (paper
+right panel).  1-D sweep, as in the paper.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import kde
+from repro.core.mixtures import benchmark_mixture_1d
+
+
+def main(ns=(4096, 8192, 16384, 32768)):
+    mix = benchmark_mixture_1d()
+    key = jax.random.PRNGKey(0)
+    h = 0.3
+    for n in ns:
+        x = mix.sample(jax.random.fold_in(key, n), n)
+        y = mix.sample(jax.random.fold_in(key, n + 1), n // 8)
+        t_fused = timeit(
+            jax.jit(lambda a, b: kde.laplace_kde_eval(a, b, h, block=4096)),
+            x, y)
+        t_nonfused = timeit(
+            jax.jit(lambda a, b: kde.laplace_kde_eval_nonfused(
+                a, b, h, block=4096)), x, y)
+        t_sdkde = timeit(
+            jax.jit(lambda a, b: kde.sdkde_eval(a, b, h, block=4096)), x, y)
+        emit("fig4", n=n,
+             fused_ms=round(t_fused * 1e3, 2),
+             nonfused_ms=round(t_nonfused * 1e3, 2),
+             fusion_speedup=round(t_nonfused / t_fused, 2),
+             sdkde_over_laplace=round(t_sdkde / t_fused, 2))
+
+
+if __name__ == "__main__":
+    argparse.ArgumentParser().parse_args()
+    main()

@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md §Roofline tables from results/dryrun_*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir results]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _fmt_ms(s):
+    return f"{s*1e3:,.1f}"
+
+
+def render(path: str) -> str:
+    recs = json.load(open(path))
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
+        "| model/HLO | MFU@roofline | GB/dev | fits 16G? |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skip "
+                f"| — | — | — | ({r['reason'][:40]}…) |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL |||||||| ")
+            continue
+        gb = r["bytes_per_device"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_ms(r['t_compute_s'])} "
+            f"| {_fmt_ms(r['t_memory_s'])} | {_fmt_ms(r['t_collective_s'])} "
+            f"| {r['bound']} | {r['useful_ratio']:.2f} "
+            f"| {r['mfu']*100:.1f}% | {gb:.1f} "
+            f"| {'yes' if gb <= 16 else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results")
+    args = ap.parse_args()
+    for mesh in ("single", "multi"):
+        p = os.path.join(args.dir, f"dryrun_{mesh}.json")
+        if os.path.exists(p):
+            print(f"\n### {mesh} mesh\n")
+            print(render(p))
+
+
+if __name__ == "__main__":
+    main()

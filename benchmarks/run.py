@@ -1,0 +1,41 @@
+"""Benchmark aggregator: one harness per paper figure/table.
+
+``python -m benchmarks.run`` runs every harness at CPU-scaled sizes and
+prints ``name,key=value,...`` CSV.  Individual harnesses accept flags for
+the paper's full sizes on real hardware.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import (
+    fig1_runtime,
+    fig2_oracle_16d,
+    fig3_oracle_1d,
+    fig4_fusion,
+    fig5_utilization,
+    table1_methods,
+)
+
+
+def main() -> None:
+    t0 = time.time()
+    print("# Flash-SD-KDE benchmark suite (CPU-scaled; see EXPERIMENTS.md)")
+    print("# fig1: 16-D runtime, naive vs GEMM vs flash (paper Fig. 1)")
+    fig1_runtime.main(ns=(1024, 2048, 4096))
+    print("# fig2: 16-D oracle MISE/MIAE (paper Fig. 2)")
+    fig2_oracle_16d.main(ns=(512, 1024, 2048), seeds=(0, 1), n_mc=2048)
+    print("# fig3: 1-D oracle MISE/MIAE (paper Fig. 3)")
+    fig3_oracle_1d.main(ns=(512, 1024, 2048, 4096), seeds=(0, 1))
+    print("# fig4: Laplace fusion speedup (paper Fig. 4)")
+    fig4_fusion.main(ns=(4096, 8192, 16384))
+    print("# fig5: utilization / roofline terms (paper Fig. 5/7)")
+    fig5_utilization.main(ns=(1024, 2048, 4096))
+    print("# table1: method comparison at fixed size (paper Table 1)")
+    table1_methods.main(n=8192)
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

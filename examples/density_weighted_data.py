@@ -1,0 +1,43 @@
+"""SD-KDE density weighting as a data-pipeline stage (DESIGN.md §4).
+
+The paper's estimator applied to the framework's data layer: score a corpus
+of example embeddings with Flash-SD-KDE, up-weight low-density tail
+examples, and show the re-weighted sampler visits the tail ~uniformly.
+
+    PYTHONPATH=src python examples/density_weighted_data.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.estimator import EstimatorConfig
+from repro.data.density import DensityWeighting
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # Corpus: 95% near-duplicate cluster + 5% rare tail (the real-world
+    # shape density weighting exists for).
+    dup = jax.random.normal(key, (1900, 16)) * 0.05
+    tail = jax.random.normal(jax.random.fold_in(key, 1), (100, 16)) * 2 + 4
+    corpus = jnp.concatenate([dup, tail])
+
+    stage = DensityWeighting(alpha=0.75,
+                             config=EstimatorConfig(block=512)).fit(corpus)
+    w = stage(corpus)
+    print(f"mean weight: duplicates={float(w[:1900].mean()):.3f}  "
+          f"tail={float(w[1900:].mean()):.3f}  "
+          f"(ratio {float(w[1900:].mean()/w[:1900].mean()):.1f}x)")
+
+    # Resample a batch with the weights: tail representation jumps from
+    # 5% to a much healthier fraction.
+    idx = stage.resample_indices(corpus, jax.random.PRNGKey(2), 256)
+    frac_tail = float((np.asarray(idx) >= 1900).mean())
+    print(f"tail fraction: raw 5.0%  ->  resampled {100*frac_tail:.1f}%")
+    assert frac_tail > 0.15
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.analysis.hlo import collective_bytes, hlo_collectives
+from repro.analysis.roofline import RooflineTerms, roofline_from_compiled, HW
+from repro.analysis.flops import model_flops, sdkde_flops, sdkde_bytes
+
+__all__ = [
+    "collective_bytes",
+    "hlo_collectives",
+    "RooflineTerms",
+    "roofline_from_compiled",
+    "HW",
+    "model_flops",
+    "sdkde_flops",
+    "sdkde_bytes",
+]

@@ -1,0 +1,111 @@
+"""HLO text analysis: collective traffic extraction.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+bytes; per the brief we parse the (lowered or compiled) HLO text and sum the
+operand sizes of every collective op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+For each op we record the *output* shape bytes (the wire payload actually
+moved per participating device, up to the algorithm factor — see
+``ALGO_FACTOR`` for the per-collective bytes-on-the-link multiplier used by
+the roofline model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# Bytes actually traversing a link per device, as a multiple of the payload
+# (bandwidth-optimal ring algorithms): all-reduce moves ~2× the shard,
+# all-gather/reduce-scatter ~1×, all-to-all ~1×, permute exactly 1×.
+ALGO_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# e.g.  "bf16[2048,512]{1,0}"  or  "f32[]"; tuples appear as (a, b, ...)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int            # output payload bytes (per device)
+    link_bytes: float     # bytes on the wire (payload × algo factor)
+
+
+def hlo_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Every collective in the HLO with its payload size.
+
+    ``-start``/``-done`` async pairs are counted once (on ``-start``;
+    bare ops count directly).
+    """
+    ops: List[CollectiveOp] = []
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue   # counted at -start
+        b = _shape_bytes(shape_str)
+        ops.append(CollectiveOp(kind, b, b * ALGO_FACTOR[kind]))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Aggregate: payload + wire bytes per collective kind and total."""
+    agg: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    wire = 0.0
+    payload = 0
+    for op in hlo_collectives(hlo_text):
+        agg[op.kind] += op.bytes
+        counts[op.kind] += 1
+        wire += op.link_bytes
+        payload += op.bytes
+    out = {f"{k}_bytes": v for k, v in agg.items()}
+    out.update({f"{k}_count": float(c) for k, c in counts.items()})
+    out["payload_bytes"] = float(payload)
+    out["wire_bytes"] = wire
+    return out

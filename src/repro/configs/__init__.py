@@ -1,0 +1,154 @@
+"""Architecture / workload registry.
+
+Every assigned architecture is a module in this package exporting ``ARCH``
+(an :class:`ArchSpec` with the exact published numbers from the brief) — the
+launcher resolves ``--arch <id>`` here.  The paper's own SD-KDE workloads
+are registered alongside the LM architectures so the multi-pod dry-run
+treats them as first-class cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+from repro.models.common import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Shapes (the assigned input-shape set; identical across LM architectures).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    """One assigned input shape.
+
+    ``kind`` selects the lowered program:
+      * ``train``   — full train_step (fwd+bwd+optimizer), grad accumulation
+                      over ``microbatches``.
+      * ``prefill`` — serve-side prefill: forward over ``seq_len`` tokens
+                      producing the KV cache + last-token logits.
+      * ``decode``  — serve_step: ONE new token against a ``seq_len``-token
+                      KV cache (the brief's decode_*/long_* semantics).
+    """
+
+    name: str
+    kind: str                # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1    # train only: grad-accumulation steps
+
+
+TRAIN_4K = ShapeCfg("train_4k", "train", 4096, 256, microbatches=8)
+PREFILL_32K = ShapeCfg("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeCfg("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeCfg("long_500k", "decode", 524288, 1)
+
+LM_SHAPES: Tuple[ShapeCfg, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES: Dict[str, ShapeCfg] = {s.name: s for s in LM_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Architecture spec.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    model: ModelConfig
+    # shape name -> reason, for cells the assignment designates as skips
+    # (e.g. long_500k on pure full-attention archs).
+    skips: Dict[str, str] = dataclasses.field(default_factory=dict)
+    source: str = ""
+    # training policy (memory-driven at the ~1T scale)
+    optimizer: str = "adamw"          # adamw | adafactor
+    accum_dtype: str = "float32"      # gradient-accumulator dtype
+    # Override the shape's grad-accumulation count.  FSDP-gathered expert
+    # weights are re-gathered per microbatch, so fewer/larger microbatches
+    # amortize that traffic (§Perf kimi iteration 4: 8 -> 2 quarters it).
+    train_microbatches: Optional[int] = None
+
+    def shape_applicable(self, shape: ShapeCfg) -> Optional[str]:
+        """None if the (arch, shape) cell runs; else the skip reason."""
+        return self.skips.get(shape.name)
+
+
+FULL_ATTN_LONG_SKIP = (
+    "long_500k requires sub-quadratic attention; this arch is pure "
+    "full-attention (see DESIGN.md §Arch-applicability)"
+)
+
+
+# ---------------------------------------------------------------------------
+# SD-KDE workloads (the paper's own tables, as dry-run cells).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KdeWorkload:
+    arch_id: str
+    n_train: int
+    n_test: int
+    dim: int
+    source: str = "Flash-SD-KDE paper §6"
+
+
+KDE_WORKLOADS: Dict[str, KdeWorkload] = {
+    # Figure 1 / Table 1 scale: 32k train, n_test = n/8.
+    "flash_sdkde_32k": KdeWorkload("flash_sdkde_32k", 32768, 4096, 16),
+    # "1M-sample 16-dimensional task evaluated on 131k queries" (§1, §7).
+    "flash_sdkde_1m": KdeWorkload("flash_sdkde_1m", 1048576, 131072, 16),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "minitron_8b",
+    "phi3_mini_3p8b",
+    "gemma2_2b",
+    "chatglm3_6b",
+    "kimi_k2_1t_a32b",
+    "granite_moe_3b_a800m",
+    "hymba_1p5b",
+    "llava_next_34b",
+    "whisper_large_v3",
+    "falcon_mamba_7b",
+)
+
+_ALIASES = {
+    "minitron-8b": "minitron_8b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "gemma2-2b": "gemma2_2b",
+    "chatglm3-6b": "chatglm3_6b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "hymba-1.5b": "hymba_1p5b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-large-v3": "whisper_large_v3",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    arch_id = _ALIASES.get(arch_id, arch_id).replace("-", "_")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}"
+        )
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.ARCH
+
+
+def list_archs() -> Tuple[str, ...]:
+    return ARCH_IDS
+
+
+def arch_cells(arch: ArchSpec):
+    """All (shape, skip_reason) cells for an arch — skips included so the
+    roofline table can record WHY a cell is absent."""
+    return [(s, arch.shape_applicable(s)) for s in LM_SHAPES]

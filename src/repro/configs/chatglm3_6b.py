@@ -1,0 +1,35 @@
+"""ChatGLM3-6B [arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024.  2D RoPE (rotate
+only the first half of the head dim), SwiGLU.  Pure full-attention →
+long_500k is an assigned skip.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    head_dim=128,
+    act="swiglu",
+    rope_variant="half",         # chatglm 2d rope
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="chatglm3_6b",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="arXiv:2406.12793; hf",
+)

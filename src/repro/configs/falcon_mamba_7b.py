@@ -1,0 +1,37 @@
+"""Falcon-Mamba 7B — pure Mamba1, attention-free [arXiv:2410.05355; unverified].
+
+64L d_model=4096 (no attention) vocab=65024, ssm_state=16, expand=2.
+O(1) decode state (conv window + SSM state) → BOTH long-context cells run:
+prefill_32k uses the associative-scan training path, decode shapes carry
+(conv_state, ssm_state) only — no KV cache at all.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=32,                  # unused (attn-free); kept for cfg validity
+    n_kv_heads=8,
+    d_ff=0,
+    vocab_size=65024,
+    head_dim=128,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    attn_free=True,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="falcon_mamba_7b",
+    model=MODEL,
+    skips={},
+    source="arXiv:2410.05355; unverified",
+)

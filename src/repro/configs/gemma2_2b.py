@@ -1,0 +1,45 @@
+"""Gemma-2 2B [arXiv:2408.00118; hf].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.  Alternating
+local(4096-window)/global layers, attn + final logit softcapping, sandwich
+norms, (1+w) RMSNorm, tied embeddings scaled by sqrt(d).
+
+long_500k RUNS for this arch: decode against a 524k cache is O(S) per token
+and the alternating local layers bound half the cache traffic to the 4096
+window (DESIGN.md §Arch-applicability).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=9216,
+    vocab_size=256000,
+    head_dim=256,
+    act="geglu",
+    rms_one_plus=True,
+    post_norms=True,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    sliding_window=4096,
+    local_global_alt=True,
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="gemma2_2b",
+    model=MODEL,
+    skips={},
+    source="arXiv:2408.00118; hf",
+)

@@ -1,0 +1,38 @@
+"""Granite-3.0 MoE 3B-A800M [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512(per-expert) vocab=49155,
+MoE 40 experts top-8.  40 experts don't divide the 16-way ``model`` axis, so
+experts shard on the per-expert d_ff axis instead (TP-in-expert; see
+models/common._moe_shapes).  Pure full-attention → long_500k skip.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    head_dim=64,
+    act="swiglu",
+    n_experts=40,
+    top_k=8,
+    moe_dff=512,
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="granite_moe_3b_a800m",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+)

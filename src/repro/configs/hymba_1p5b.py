@@ -1,0 +1,38 @@
+"""Hymba-1.5B — parallel attention+Mamba heads [arXiv:2411.13676; hf].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Each layer runs attention and a Mamba SSM in PARALLEL on the same normed
+input and fuses them with learned per-channel scales (models/transformer
+``hybrid`` family).  The SSM half gives O(1) decode state → long_500k RUNS.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,                 # 1600 / 25
+    act="swiglu",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="hymba_1p5b",
+    model=MODEL,
+    skips={},
+    source="arXiv:2411.13676; hf",
+)

@@ -1,0 +1,55 @@
+"""Kimi-K2 1T-A32B — trillion-param MoE [arXiv:2501.kimi2; unverified].
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048(per-expert) vocab=163840,
+MoE 384 experts top-8 + 1 always-on shared expert (paper table).  The brief
+specifies the GQA attention variant (not MLA).  Pure full-attention →
+long_500k is an assigned skip.
+
+At this scale the expert tensors dominate (~1T params); they are sharded
+2-D — expert axis over ``model`` (384/16 = 24 experts per device) and the
+per-expert d_ff over ``data`` — so bf16 parameters fit a single v5e pod
+(~8 GB/chip).  See EXPERIMENTS.md §Dry-run for the memory ledger.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,                   # dense-equivalent width unused; experts rule
+    vocab_size=163840,
+    head_dim=112,                # 7168 / 64
+    act="swiglu",
+    n_experts=384,
+    top_k=8,
+    moe_dff=2048,
+    n_shared_experts=1,
+    rope_theta=50000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+    expert_2d_sharding=True,     # expert axis over model, d_ff over data
+    # 64 q-heads divide the model axis but the 8 KV heads don't; measured
+    # better with sequence-sharded attention (§Perf kimi iteration 4).
+    seq_shard_attn=True,
+)
+
+ARCH = ArchSpec(
+    arch_id="kimi_k2_1t_a32b",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="arXiv:2501.kimi2 (paper-table); unverified",
+    # ~1T params: factored second moments + bf16 grad accumulators are the
+    # difference between 1 and 4 pods of optimizer state (EXPERIMENTS.md).
+    optimizer="adafactor",
+    accum_dtype="bfloat16",
+    # Expert weights are FSDP-gathered per microbatch; 2 large microbatches
+    # quarter that wire traffic vs the default 8 (§Perf kimi iteration 4).
+    train_microbatches=2,
+)

@@ -1,0 +1,41 @@
+"""LLaVA-NeXT 34B backbone [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.  The vision
+frontend is a STUB per the brief: ``input_specs()`` supplies precomputed
+anyres patch embeddings (B, n_patches, d_model) which a learned projection
+maps into the token stream before the text tokens.  Pure full-attention →
+long_500k is an assigned skip.
+
+``n_patches=2880`` models anyres tiling: 4 high-res tiles + 1 base tile ×
+576 patches each.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    head_dim=128,
+    act="swiglu",
+    n_patches=2880,              # anyres: (4 tiles + base) x 576
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="llava_next_34b",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (anyres tiling); unverified",
+    accum_dtype="bfloat16",
+)

@@ -1,0 +1,33 @@
+"""Minitron-8B — width/depth-pruned Nemotron-4 [arXiv:2407.14679; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.  Pure
+full-attention dense decoder → long_500k is an assigned skip.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    head_dim=128,
+    act="relu2",                 # nemotron uses squared-ReLU FFN
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,    # f32 master copies live in the optimizer
+)
+
+ARCH = ArchSpec(
+    arch_id="minitron_8b",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="arXiv:2407.14679 (pruned nemotron); hf",
+)

@@ -1,0 +1,33 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219; unverified].
+
+32L d_model=3072 32H (GQA kv=32 — i.e. MHA) d_ff=8192 vocab=32064.
+RoPE + SwiGLU.  Pure full-attention → long_500k is an assigned skip.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    head_dim=96,
+    act="swiglu",
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="phi3_mini_3p8b",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="arXiv:2404.14219; unverified",
+)

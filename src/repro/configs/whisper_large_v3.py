@@ -1,0 +1,41 @@
+"""Whisper large-v3 backbone [arXiv:2212.04356; unverified].
+
+32L(dec) d_model=1280 20H (kv=20, i.e. MHA) d_ff=5120 vocab=51866.
+Encoder-decoder: 32 encoder layers over 1500 stub frame embeddings (the
+conv frontend is a STUB per the brief — ``input_specs()`` provides
+precomputed (B, 1500, d) frames), decoder with self- + cross-attention.
+
+decode_32k runs via the decoder self-attn cache + precomputed cross-attn
+K/V; long_500k is an assigned skip (full-attention decoder).
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, FULL_ATTN_LONG_SKIP
+from repro.models.common import ModelConfig
+
+MODEL = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    head_dim=64,
+    act="gelu",
+    n_enc_layers=32,
+    enc_frames=1500,
+    tie_embeddings=True,         # whisper ties decoder embed / proj
+    rope_theta=10000.0,
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+ARCH = ArchSpec(
+    arch_id="whisper_large_v3",
+    model=MODEL,
+    skips={"long_500k": FULL_ATTN_LONG_SKIP},
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,40 @@
+"""Core SD-KDE library — the paper's contribution as composable JAX modules."""
+
+from repro.core.bandwidth import (
+    gaussian_norm_const,
+    score_bandwidth,
+    sdkde_bandwidth,
+    silverman_bandwidth,
+)
+from repro.core.estimator import KDE, SDKDE, EstimatorConfig, LaplaceKDE
+from repro.core.kde import (
+    empirical_score,
+    kde_eval,
+    kde_eval_naive,
+    laplace_kde_eval,
+    laplace_kde_eval_nonfused,
+    score_stats,
+    sdkde_eval,
+    sdkde_eval_oracle,
+    sdkde_shift,
+    sqdist,
+)
+from repro.core.metrics import OracleErrors, oracle_errors
+from repro.core.mixtures import (
+    GaussianMixture,
+    benchmark_mixture_1d,
+    benchmark_mixture_16d,
+    mixture_for_dim,
+)
+
+__all__ = [
+    "KDE", "SDKDE", "LaplaceKDE", "EstimatorConfig",
+    "kde_eval", "kde_eval_naive", "sdkde_eval", "sdkde_eval_oracle",
+    "sdkde_shift", "score_stats", "empirical_score", "sqdist",
+    "laplace_kde_eval", "laplace_kde_eval_nonfused",
+    "silverman_bandwidth", "sdkde_bandwidth", "score_bandwidth",
+    "gaussian_norm_const",
+    "GaussianMixture", "benchmark_mixture_16d", "benchmark_mixture_1d",
+    "mixture_for_dim",
+    "OracleErrors", "oracle_errors",
+]

@@ -1,0 +1,59 @@
+"""Bandwidth selection rules for KDE / SD-KDE.
+
+The paper (and the underlying SD-KDE paper, Epstein et al. 2025) uses the
+Gaussian kernel throughout.  Classical KDE with Silverman's rule scales the
+bandwidth as ``n^{-1/(d+4)}``; SD-KDE's improved AMISE ``O(n^{-8/(d+8)})`` is
+attained with the wider ``n^{-1/(d+8)}`` scaling.  Both are provided, plus the
+score-estimation bandwidth convention ``t' = h^2/2`` (i.e. ``h_score = h/sqrt(2)``)
+from the paper's semigroup analysis (Section 5).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def silverman_bandwidth(x: jnp.ndarray) -> jnp.ndarray:
+    """Silverman's rule of thumb, isotropic, d-dimensional.
+
+    ``h = (4 / (d + 2))^{1/(d+4)} * n^{-1/(d+4)} * sigma_bar``
+
+    where ``sigma_bar`` is the average per-dimension standard deviation.
+    """
+    n, d = x.shape
+    sigma = jnp.std(x, axis=0).mean()
+    factor = (4.0 / (d + 2.0)) ** (1.0 / (d + 4.0))
+    return factor * (n ** (-1.0 / (d + 4.0))) * sigma
+
+
+def sdkde_bandwidth(x: jnp.ndarray, scale: float = 1.0) -> jnp.ndarray:
+    """SD-KDE-rate bandwidth: ``h ∝ n^{-1/(d+8)}``.
+
+    SD-KDE cancels the leading ``O(h^2)`` bias term, so the AMISE-optimal
+    bandwidth is wider than Silverman's; we keep Silverman's constant and
+    swap the exponent (the constant is absorbed into ``scale`` which users
+    may tune).
+    """
+    n, d = x.shape
+    sigma = jnp.std(x, axis=0).mean()
+    factor = (4.0 / (d + 2.0)) ** (1.0 / (d + 4.0))
+    return scale * factor * (n ** (-1.0 / (d + 8.0))) * sigma
+
+
+def score_bandwidth(h: jnp.ndarray | float) -> jnp.ndarray | float:
+    """Bandwidth for the empirical-score KDE.
+
+    The paper's operator analysis (Section 5) uses ``t' = h^2 / 2`` for the
+    score-estimation kernel, i.e. ``h_score = h / sqrt(2)``.  The Section-1
+    formula uses the same ``h``; both conventions are supported — this helper
+    implements the semigroup convention, and estimators accept an explicit
+    ``score_h`` to override.
+    """
+    return h / math.sqrt(2.0)
+
+
+def gaussian_norm_const(d: int, h: float) -> float:
+    """Normalizer ``(2*pi)^{d/2} * h^d`` of the isotropic Gaussian kernel."""
+    return (2.0 * math.pi) ** (d / 2.0) * float(h) ** d

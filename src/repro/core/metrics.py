@@ -1,0 +1,97 @@
+"""Oracle-error metrics: MISE, MIAE, negative-mass diagnostic.
+
+The paper reports Mean Integrated Squared Error and Mean Integrated Absolute
+Error against the known mixture density ("oracle error", Figs. 2-3), computed
+on the *signed* estimator because the Laplace-corrected kernel can go
+negative; the integrated negative mass is logged separately as a diagnostic.
+
+In 1-D the integrals are computed on a uniform grid.  In 16-D a grid is
+infeasible, so we use self-normalized importance sampling with a widened
+version of the oracle mixture as the proposal:
+
+    ∫ f(x) dx ≈ (1/m) Σ f(z_k)/q(z_k),   z_k ~ q.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mixtures import GaussianMixture
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleErrors:
+    mise: float
+    miae: float
+    neg_mass: float
+
+
+def widened_proposal(mix: GaussianMixture, widen: float = 1.5) -> GaussianMixture:
+    """Proposal q = oracle mixture with stds widened (covers the tails)."""
+    return GaussianMixture(
+        means=mix.means, stds=mix.stds * widen, weights=mix.weights
+    )
+
+
+def oracle_errors_grid(
+    estimate_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    mix: GaussianMixture,
+    lo: float,
+    hi: float,
+    n_grid: int = 2048,
+) -> OracleErrors:
+    """1-D grid integration of (p̂-p)², |p̂-p| and max(-p̂, 0)."""
+    assert mix.dim == 1
+    grid = jnp.linspace(lo, hi, n_grid)[:, None]
+    dx = (hi - lo) / (n_grid - 1)
+    p_hat = estimate_fn(grid)
+    p = mix.pdf(grid)
+    err = p_hat - p
+    return OracleErrors(
+        mise=float(jnp.sum(err**2) * dx),
+        miae=float(jnp.sum(jnp.abs(err)) * dx),
+        neg_mass=float(jnp.sum(jnp.maximum(-p_hat, 0.0)) * dx),
+    )
+
+
+def oracle_errors_importance(
+    estimate_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    mix: GaussianMixture,
+    key: jax.Array,
+    n_mc: int = 8192,
+    widen: float = 1.5,
+) -> OracleErrors:
+    """High-dimensional oracle error via importance sampling."""
+    q = widened_proposal(mix, widen)
+    z = q.sample(key, n_mc)
+    qz = q.pdf(z)
+    p_hat = estimate_fn(z)
+    p = mix.pdf(z)
+    err = p_hat - p
+    inv_q = 1.0 / jnp.maximum(qz, 1e-300)
+    return OracleErrors(
+        mise=float(jnp.mean(err**2 * inv_q)),
+        miae=float(jnp.mean(jnp.abs(err) * inv_q)),
+        neg_mass=float(jnp.mean(jnp.maximum(-p_hat, 0.0) * inv_q)),
+    )
+
+
+def oracle_errors(
+    estimate_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    mix: GaussianMixture,
+    key: jax.Array | None = None,
+    **kw,
+) -> OracleErrors:
+    """Dispatch: grid in 1-D, importance sampling otherwise."""
+    if mix.dim == 1:
+        span = float(mix.stds.max()) * 6.0
+        lo = float(mix.means.min()) - span
+        hi = float(mix.means.max()) + span
+        return oracle_errors_grid(estimate_fn, mix, lo, hi, **kw)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return oracle_errors_importance(estimate_fn, mix, key, **kw)

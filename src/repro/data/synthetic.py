@@ -1,0 +1,139 @@
+"""Deterministic synthetic data shards (token LM + modality stubs).
+
+Design goals mirror a production loader at the interface level:
+
+  * **Determinism / restart safety** — a batch is a pure function of
+    (seed, step), so checkpoint-restart resumes the exact stream, and a
+    re-dispatched straggler microbatch is bit-identical.
+  * **Host-sharded generation** — each host materializes only its slice of
+    the global batch (``host_local_batch``), then ``device_put``s with the
+    global sharding; no host ever holds the full global batch.
+  * **Prefetch** — ``PrefetchLoader`` overlaps generation of step t+1 with
+    compute of step t (a thread, matching the usual double-buffer depth).
+
+Token streams are Zipf-distributed (more realistic logits/loss than uniform)
+with a deterministic per-(seed, step) key.  VLM patches and audio frames are
+Gaussian stub embeddings, per the brief (frontends are stubs).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def _zipf_tokens(key, shape, vocab: int, alpha: float = 1.1) -> jnp.ndarray:
+    """Zipf-ish token ids via the inverse CDF of a bounded power law.
+
+    Continuous p(r) ∝ r^{-alpha} on [1, V]:  CDF⁻¹(u) = (1 + u·(V^{1-a}−1))
+    ^{1/(1-a)} — low ids are far more frequent, like real text.
+    """
+    u = jax.random.uniform(key, shape, minval=0.0, maxval=1.0)
+    a = 1.0 - alpha
+    r = (1.0 + u * (float(vocab) ** a - 1.0)) ** (1.0 / a)
+    r = jnp.clip(r, 1.0, float(vocab))
+    return (r - 1.0).astype(jnp.int32)
+
+
+def lm_batch(cfg: ModelConfig, seed: int, step: int, batch: int,
+             seq: int) -> Dict[str, jnp.ndarray]:
+    """Global batch as a dict of arrays — pure function of (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k_tok, k_mod = jax.random.split(key)
+    out = {"tokens": _zipf_tokens(k_tok, (batch, seq), cfg.vocab_size)}
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k_mod, (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            k_mod, (batch, cfg.enc_frames, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, batch_axes=("data",)) -> Dict[str, P]:
+    """Batch shards over the data(+pod) axes; seq/features replicated."""
+    ax = tuple(batch_axes)
+    specs = {"tokens": P(ax, None)}
+    if cfg.family == "vlm":
+        specs["patches"] = P(ax, None, None)
+    if cfg.family == "audio":
+        specs["frames"] = P(ax, None, None)
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                batch_axes=("data",)) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    specs = batch_pspecs(cfg, batch_axes)
+    shapes = {"tokens": ((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        shapes["patches"] = ((batch, cfg.n_patches, cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        shapes["frames"] = ((batch, cfg.enc_frames, cfg.d_model), cfg.dtype)
+    return {
+        k: jax.ShapeDtypeStruct(s, dt, sharding=NamedSharding(mesh, specs[k]))
+        for k, (s, dt) in shapes.items()
+    }
+
+
+def host_local_batch(
+    cfg: ModelConfig, seed: int, step: int, batch: int, seq: int,
+    mesh: Mesh, batch_axes=("data",),
+) -> Dict[str, jax.Array]:
+    """Generate this host's slice of the global batch and assemble the
+    globally-sharded arrays via ``make_array_from_callback`` — each host
+    computes only the rows it owns."""
+    specs = batch_pspecs(cfg, batch_axes)
+    full = lm_batch(cfg, seed, step, batch, seq)  # traced lazily per-slice
+
+    out = {}
+    for name, arr in full.items():
+        sharding = NamedSharding(mesh, specs[name])
+        np_arr = np.asarray(arr)
+
+        def cb(index, _a=np_arr):
+            return _a[index]
+
+        out[name] = jax.make_array_from_callback(np_arr.shape, sharding, cb)
+    return out
+
+
+class PrefetchLoader:
+    """Double-buffered loader: generates batch t+1 while t is consumed."""
+
+    def __init__(self, make_batch, start_step: int = 0, depth: int = 2):
+        self._make = make_batch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._make(step)), timeout=0.1)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=1.0)

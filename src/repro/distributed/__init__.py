@@ -1,0 +1,21 @@
+"""Distributed runtime: ring-sharded SD-KDE, fault tolerance, elasticity."""
+
+from repro.distributed import ring  # noqa: F401
+from repro.distributed.compression import (  # noqa: F401
+    compress,
+    compressed_psum,
+    decompress,
+    init_residual,
+)
+from repro.distributed.elastic import (  # noqa: F401
+    MeshPlan,
+    make_mesh,
+    plan_mesh,
+    rebatch,
+    reshard_specs,
+)
+from repro.distributed.fault import RestartLoop, Supervisor  # noqa: F401
+from repro.distributed.straggler import (  # noqa: F401
+    DuplicateDispatcher,
+    pick_backup,
+)

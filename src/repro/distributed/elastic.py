@@ -1,0 +1,108 @@
+"""Elastic scaling: mesh planning + state resharding on shrink/grow.
+
+When the fleet loses (or gains) hosts, the job restarts on a different
+device count.  This module picks the new mesh shape and re-computes every
+sharding for it; checkpoint.restore(shardings=...) then re-places the saved
+state — params, optimizer, data cursor — onto the new mesh.  The TRAINING
+SEMANTICS are preserved by keeping the global batch size fixed and scaling
+the per-device batch (grad-accumulation count absorbs non-divisibility).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    note: str = ""
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int = 16,
+    want_pods: Optional[int] = None,
+) -> MeshPlan:
+    """Largest (pod, data, model) mesh that fits ``n_devices``.
+
+    Keeps the model axis fixed (TP degree is architecture-determined) and
+    gives the rest to data; a pod axis is split out when the count divides.
+    Drops devices that don't fit the grid (reported in ``note``) — the
+    shrink path after failures.
+    """
+    mp = model_parallel
+    while mp > 1 and n_devices % mp != 0:
+        mp //= 2
+    rest = n_devices // mp
+    if want_pods and rest % want_pods == 0 and want_pods > 1:
+        plan = MeshPlan((want_pods, rest // want_pods, mp),
+                        ("pod", "data", "model"))
+    else:
+        plan = MeshPlan((rest, mp), ("data", "model"))
+    used = plan.n_devices
+    note = "" if used == n_devices else f"dropping {n_devices - used} devices"
+    return dataclasses.replace(plan, note=note)
+
+
+def make_mesh(plan: MeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = plan.n_devices
+    import numpy as np
+
+    grid = np.asarray(devices[:n]).reshape(plan.shape)
+    return Mesh(grid, plan.axes)
+
+
+def reshard_specs(
+    pspecs: Dict[str, P], old_mesh_axes: Tuple[str, ...], new_mesh: Mesh
+) -> Dict[str, NamedSharding]:
+    """Map logical PartitionSpecs onto a (possibly smaller) new mesh.
+
+    Axes that disappeared from the mesh (e.g. ``pod`` after a shrink to one
+    pod) are dropped from every spec — those dims become replicated.
+    """
+    live = set(new_mesh.axis_names)
+
+    def fix_entry(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a in live)
+            return kept if kept else None
+        return e if e in live else None
+
+    out = {}
+    for name, spec in pspecs.items():
+        out[name] = NamedSharding(new_mesh, P(*(fix_entry(e) for e in spec)))
+    return out
+
+
+def rebatch(global_batch: int, old_dp: int, new_dp: int,
+            microbatches: int) -> Tuple[int, int, int]:
+    """(per_device_batch, microbatches, new_global) after a dp resize.
+
+    Prefers keeping the global batch exactly (growing the accumulation count
+    until the new dp degree divides); when no exact tiling exists (e.g. 256
+    over 15 hosts), the global batch moves to the NEAREST achievable
+    multiple — training semantics change minimally and deterministically.
+    """
+    for mb in range(microbatches, global_batch + 1):
+        if global_batch % (new_dp * mb) == 0:
+            return global_batch // (new_dp * mb), mb, global_batch
+    mb = microbatches
+    per_dev = max(1, round(global_batch / (new_dp * mb)))
+    return per_dev, mb, per_dev * new_dp * mb

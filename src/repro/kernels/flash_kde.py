@@ -1,0 +1,67 @@
+"""Flash KDE evaluation kernel: Gaussian kernel sums at query points.
+
+Computes p_j = Σ_i exp(-‖y_j - x_i‖²/(2h²)) for query rows y_j against the
+(debiased) train set, streaming train column tiles through VMEM and
+accumulating the (BLOCK_M, 1) partial sums in place across the innermost
+grid dimension (sequential-grid accumulation — see flash_score.py).
+
+The Gram tile (BLOCK_M×d)@(d×BLOCK_N) runs on the MXU; the exponential and
+row reduction run on the VPU.  Normalization (1/(n (2π)^{d/2} h^d)) is
+applied by the ops.py wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kde_kernel(y_m_ref, nrm_m_ref, xt_n_ref, nrm_n_ref, inv2h2_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = jnp.dot(y_m_ref[...], xt_n_ref[...],
+                preferred_element_type=jnp.float32)
+    sq = nrm_m_ref[...] + nrm_n_ref[...] - 2.0 * g
+    phi = jnp.exp(-sq * inv2h2_ref[0, 0])
+    out_ref[...] += jnp.sum(phi, axis=1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def flash_kde_pallas(
+    y: jnp.ndarray,        # (m, d)  queries, padded to block_m multiple
+    nrm_y: jnp.ndarray,    # (m, 1)  f32
+    xt: jnp.ndarray,       # (d, n)  train (transposed), padded to block_n
+    nrm_x: jnp.ndarray,    # (1, n)  f32
+    inv2h2: jnp.ndarray,   # (1, 1)  f32
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw kernel launch; returns unnormalized sums (m, 1) f32."""
+    m, d = y.shape
+    n = xt.shape[1]
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+
+    return pl.pallas_call(
+        _kde_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(y, nrm_y, xt, nrm_x, inv2h2)

@@ -1,0 +1,95 @@
+"""Flash-Laplace-KDE kernels (fused + the non-fused second pass).
+
+Fused kernel: applies the Laplace correction factor inside the same
+distance/exponential pass as the plain KDE —
+
+    out_j += Σ_i φ_ij · (1 + d/2 − sqd_ij/(2h²))
+
+reusing the already-computed scaled distances, exactly the "kernel fusion
+opportunity" of Section 5.  The non-fused baseline (Fig. 4) instead runs the
+plain KDE kernel and then ``_sq_moment_kernel`` below, which *recomputes*
+the distances to form Σ φ·sqd — a second full quadratic pass with its own
+HBM traffic and launch, combined on the host as
+
+    (1 + d/2)·S − M/(2h²),   S = Σφ,  M = Σφ·sqd.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _laplace_kernel(y_m_ref, nrm_m_ref, xt_n_ref, nrm_n_ref, inv2h2_ref,
+                    out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d = xt_n_ref.shape[0]
+    g = jnp.dot(y_m_ref[...], xt_n_ref[...],
+                preferred_element_type=jnp.float32)
+    sq = nrm_m_ref[...] + nrm_n_ref[...] - 2.0 * g
+    scaled = sq * inv2h2_ref[0, 0]            # ‖u‖²/(2h²), reused twice
+    phi = jnp.exp(-scaled)
+    corr = phi * (1.0 + d / 2.0 - scaled)     # fused Laplace factor
+    out_ref[...] += jnp.sum(corr, axis=1, keepdims=True)
+
+
+def _sq_moment_kernel(y_m_ref, nrm_m_ref, xt_n_ref, nrm_n_ref, inv2h2_ref,
+                      out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = jnp.dot(y_m_ref[...], xt_n_ref[...],
+                preferred_element_type=jnp.float32)
+    sq = nrm_m_ref[...] + nrm_n_ref[...] - 2.0 * g
+    phi = jnp.exp(-sq * inv2h2_ref[0, 0])
+    out_ref[...] += jnp.sum(phi * sq, axis=1, keepdims=True)
+
+
+def _launch(kernel, y, nrm_y, xt, nrm_x, inv2h2, block_m, block_n, interpret):
+    m, d = y.shape
+    n = xt.shape[1]
+    assert m % block_m == 0 and n % block_n == 0, (m, n, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(y, nrm_y, xt, nrm_x, inv2h2)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def flash_laplace_pallas(y, nrm_y, xt, nrm_x, inv2h2, *,
+                         block_m: int = 128, block_n: int = 512,
+                         interpret: bool = False):
+    """Fused Laplace-corrected sums (m, 1) f32 — one quadratic pass."""
+    return _launch(_laplace_kernel, y, nrm_y, xt, nrm_x, inv2h2,
+                   block_m, block_n, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def sq_moment_pallas(y, nrm_y, xt, nrm_x, inv2h2, *,
+                     block_m: int = 128, block_n: int = 512,
+                     interpret: bool = False):
+    """Second pass of the non-fused baseline: Σ φ·sqd (m, 1) f32."""
+    return _launch(_sq_moment_kernel, y, nrm_y, xt, nrm_x, inv2h2,
+                   block_m, block_n, interpret)

@@ -1,0 +1,88 @@
+"""Flash score kernel: the SD-KDE empirical-score hot spot on the TPU MXU.
+
+Computes, for every training row i, the fused statistics
+
+    S1aug_i = Σ_j φ_ij · [x_j | 1]  ∈ R^{d+1}
+
+i.e. the score-numerator GEMM ``T = Φ X`` and the denominator row-sum
+``S0 = Φ·1`` in a single MXU matmul against the ones-augmented train matrix.
+φ_ij = exp(-‖x_i - x_j‖² / (2h²)) is never materialized globally: column
+tiles of the train set are streamed through VMEM and the (BLOCK_M, d+1)
+output block is accumulated in place across the innermost grid dimension —
+the TPU-idiomatic replacement for the paper's atomic-add streaming
+accumulation (TPU Pallas grids execute sequentially per core, so revisiting
+the same output block is race-free and deterministic).
+
+Tile layout (one grid step, all in VMEM):
+    x_m    (BLOCK_M, d)      row tile of X
+    nrm_m  (BLOCK_M, 1)      precomputed ‖x_i‖²
+    xt_n   (d, BLOCK_N)      column tile of Xᵀ  (lane axis = BLOCK_N)
+    xaug_n (BLOCK_N, d+1)    column tile of [X | 1]
+    nrm_n  (1, BLOCK_N)      precomputed ‖x_j‖²
+    out    (BLOCK_M, d+1)    accumulator (f32)
+
+MXU work per step: (BLOCK_M×d)@(d×BLOCK_N) Gram + (BLOCK_M×BLOCK_N)@(BLOCK_N×(d+1)).
+VPU work: broadcasted adds + one exp per pair.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(x_m_ref, nrm_m_ref, xt_n_ref, xaug_n_ref, nrm_n_ref,
+                  inv2h2_ref, out_ref):
+    # Initialize the accumulator on the first column tile of each row block.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Gram tile on the MXU; accumulate in f32 regardless of input dtype.
+    g = jnp.dot(x_m_ref[...], xt_n_ref[...],
+                preferred_element_type=jnp.float32)
+    sq = nrm_m_ref[...] + nrm_n_ref[...] - 2.0 * g        # (BM, BN) via VPU
+    phi = jnp.exp(-sq * inv2h2_ref[0, 0])
+    # Fused numerator + denominator GEMM against [X | 1].
+    out_ref[...] += jnp.dot(phi, xaug_n_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def flash_score_pallas(
+    x: jnp.ndarray,        # (n, d)   padded to block_m/block_n multiples
+    nrm: jnp.ndarray,      # (n, 1)   f32 squared norms
+    xt: jnp.ndarray,       # (d, n)
+    xaug: jnp.ndarray,     # (n, d+1) [X | 1]
+    inv2h2: jnp.ndarray,   # (1, 1)   1/(2h²), f32
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw kernel launch; returns S1aug (n, d+1) f32.  See ops.flash_score_stats
+    for the padded/normalized public wrapper."""
+    n, d = x.shape
+    assert n % block_m == 0 and n % block_n == 0, (n, block_m, block_n)
+    grid = (n // block_m, n // block_n)
+
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda m, j: (m, 0)),
+            pl.BlockSpec((block_m, 1), lambda m, j: (m, 0)),
+            pl.BlockSpec((d, block_n), lambda m, j: (0, j)),
+            pl.BlockSpec((block_n, d + 1), lambda m, j: (j, 0)),
+            pl.BlockSpec((1, block_n), lambda m, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda m, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d + 1), lambda m, j: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d + 1), jnp.float32),
+        interpret=interpret,
+    )(x, nrm, xt, xaug, jnp.broadcast_to(nrm.reshape(1, -1), (1, n)), inv2h2)

@@ -1,0 +1,241 @@
+"""Public jit'd wrappers around the Flash-SD-KDE Pallas kernels.
+
+Responsibilities: pad point sets to tile multiples (with far-away sentinel
+points whose kernel weight underflows to exactly 0.0, so padding never
+changes a result), precompute squared norms and transposed layouts (lane
+axis = the streamed column dimension, which is what the TPU wants), budget
+VMEM, launch the kernels, slice off padding and normalize.
+
+Every function here has a pure-jnp oracle in ``ref.py`` and an allclose
+sweep in ``tests/``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandwidth import gaussian_norm_const
+from repro.kernels.flash_kde import flash_kde_pallas
+from repro.kernels.flash_laplace import flash_laplace_pallas, sq_moment_pallas
+from repro.kernels.flash_score import flash_score_pallas
+
+PAD_VALUE = 1.0e6
+# VMEM is ~16 MiB/core on v5e; leave headroom for double buffering.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _pad_to(x: jnp.ndarray, mult: int, value: float = PAD_VALUE) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    return jnp.pad(x, [(0, rem)] + [(0, 0)] * (x.ndim - 1),
+                   constant_values=value)
+
+
+def _norms(x: jnp.ndarray) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    return jnp.sum(x32 * x32, axis=-1, keepdims=True)
+
+
+def _inv2h2(h) -> jnp.ndarray:
+    h = jnp.asarray(h, jnp.float32)
+    return (1.0 / (2.0 * h * h)).reshape(1, 1)
+
+
+def vmem_tile_bytes(block_m: int, block_n: int, d: int,
+                    itemsize: int = 4) -> int:
+    """Per-step VMEM working set (inputs + φ tile + output accumulator)."""
+    tiles = (
+        block_m * d            # row tile
+        + block_m              # row norms
+        + d * block_n          # xt column tile
+        + block_n * (d + 1)    # xaug column tile
+        + block_n              # column norms
+        + block_m * block_n    # φ tile (registers/VMEM intermediate)
+        + block_m * (d + 1)    # accumulator
+    )
+    return tiles * itemsize
+
+
+def _check_vmem(block_m: int, block_n: int, d: int) -> None:
+    b = vmem_tile_bytes(block_m, block_n, d)
+    if b > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"tile working set {b/2**20:.1f} MiB exceeds VMEM budget "
+            f"({VMEM_BUDGET_BYTES/2**20:.0f} MiB): block_m={block_m} "
+            f"block_n={block_n} d={d}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Score statistics / SD-KDE shift.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def flash_score_stats(
+    x: jnp.ndarray,
+    h,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """(S0, S1) score statistics over the train set via the fused kernel."""
+    n, d = x.shape
+    _check_vmem(block_m, block_n, d)
+    mult = math.lcm(block_m, block_n)
+    xp = _pad_to(x, mult)
+    npad = xp.shape[0]
+    xaug = jnp.concatenate(
+        [xp, jnp.ones((npad, 1), xp.dtype)], axis=1
+    )
+    s1aug = flash_score_pallas(
+        xp, _norms(xp), xp.astype(jnp.float32).T.astype(xp.dtype), xaug,
+        _inv2h2(h),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    s0 = s1aug[:n, d]
+    s1 = s1aug[:n, :d]
+    return s0, s1
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def flash_sdkde_shift(
+    x: jnp.ndarray,
+    h,
+    *,
+    score_h=None,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Debiased samples x^SD = x + (h²/2)·ŝ(x), score via the flash kernel."""
+    sh = h if score_h is None else score_h
+    s0, s1 = flash_score_stats(
+        x, sh, block_m=block_m, block_n=block_n, interpret=interpret
+    )
+    sh = jnp.asarray(sh, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    x32 = x.astype(jnp.float32)
+    score = (s1 - x32 * s0[:, None]) / (sh * sh * s0[:, None])
+    return x32 + 0.5 * h * h * score
+
+
+# ---------------------------------------------------------------------------
+# KDE / Laplace-KDE evaluation.
+# ---------------------------------------------------------------------------
+
+
+def _prep_eval(x, y, block_m, block_n):
+    d = x.shape[-1]
+    _check_vmem(block_m, block_n, d)
+    yp = _pad_to(y, block_m)
+    xp = _pad_to(x, block_n)
+    xt = xp.astype(jnp.float32).T.astype(xp.dtype)
+    return yp, xp, xt
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def flash_kde(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    h,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Normalized Gaussian KDE densities at ``y`` (train set ``x``)."""
+    n, d = x.shape
+    m = y.shape[0]
+    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
+    sums = flash_kde_pallas(
+        yp, _norms(yp), xt, _norms(xp).reshape(1, -1), _inv2h2(h),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    h = jnp.asarray(h, jnp.float32)
+    return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def flash_laplace_kde(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    h,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused Flash-Laplace-KDE densities at ``y`` — single quadratic pass."""
+    n, d = x.shape
+    m = y.shape[0]
+    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
+    sums = flash_laplace_pallas(
+        yp, _norms(yp), xt, _norms(xp).reshape(1, -1), _inv2h2(h),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    h = jnp.asarray(h, jnp.float32)
+    return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def laplace_kde_nonfused(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    h,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Non-fused Laplace baseline: two quadratic kernel launches (Fig. 4)."""
+    n, d = x.shape
+    m = y.shape[0]
+    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
+    nrm_y, nrm_x = _norms(yp), _norms(xp).reshape(1, -1)
+    kde_sums = flash_kde_pallas(
+        yp, nrm_y, xt, nrm_x, _inv2h2(h),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    sq_mom = sq_moment_pallas(
+        yp, nrm_y, xt, nrm_x, _inv2h2(h),
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    h = jnp.asarray(h, jnp.float32)
+    combined = (1.0 + d / 2.0) * kde_sums - sq_mom / (2.0 * h * h)
+    return combined[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def flash_sdkde(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    h,
+    *,
+    score_h=None,
+    block_m: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Full Flash-SD-KDE: score pass → shift → KDE at queries (normalized)."""
+    x_sd = flash_sdkde_shift(
+        x, h, score_h=score_h,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return flash_kde(
+        x_sd, y, h, block_m=block_m, block_n=block_n, interpret=interpret
+    )

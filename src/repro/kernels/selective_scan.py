@@ -1,0 +1,134 @@
+"""Chunked selective-scan (Mamba1) Pallas kernel — the SSM hot spot.
+
+Why: the roofline table (EXPERIMENTS.md §Roofline) shows the SSM/hybrid
+prefill cells memory-bound by the XLA path's materialization of the
+(B, S, d_inner, N) decay/drive tensors — 83 s of HBM time for hymba
+prefill_32k.  This kernel applies the SAME insight as the paper's flash
+kernels — keep the quadratic-in-state intermediate in VMEM, stream the
+sequence — to the SSM recurrence:
+
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + (Δ_t x_t) · B_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+Layout: grid = (batch, d_inner blocks, seq chunks); the seq-chunk axis is
+LAST, i.e. sequential on TPU, so the (block_d, N) carry state lives in a
+VMEM output ref that is revisited across chunks (index_map ignores the
+sequential dim — the same sequential-grid accumulation trick as
+flash_score.py).  Within a chunk the recurrence runs as a log-depth
+associative scan over (chunk, block_d, N) ENTIRELY in VMEM/registers; only
+x/Δ/B/C stream in (O(S·(d+N)) HBM bytes) and y streams out.
+
+HBM traffic: O(B·S·(2·d_inner + 2·N)) vs the XLA path's
+O(B·S·d_inner·N) — ~8× less at falcon-mamba's d_inner=8192, N=16
+(kernels/tuning.py:selective_scan_bytes).
+
+GPU→TPU adaptation note: CUDA Mamba runs a per-thread sequential scan in
+registers/smem; the TPU-idiomatic form is chunkwise associative scan on
+the VPU with the carry in VMEM — log-depth inside the chunk, sequential
+across chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(xi_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+                 y_ref, hout_ref):
+    """One (batch, d-block, seq-chunk) step.
+
+    Block shapes (VMEM):
+      xi, dt : (chunk, bd)     — pre-activation inputs and Δ
+      b, c   : (chunk, N)      — input-dependent SSM matrices
+      a      : (bd, N)         — continuous-time A (negative)
+      h0     : (bd, N)         — initial state for THIS batch row
+      y      : (chunk, bd)     — output block
+      hout   : (bd, N)         — carry state, revisited across chunks
+    """
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        hout_ref[...] = h0_ref[...]
+
+    # blocks carry a leading singleton batch dim: index it away
+    xi = xi_ref[0].astype(jnp.float32)           # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)             # (chunk, N)
+    c = c_ref[0].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)           # (bd, N)
+
+    # decay_t = exp(Δ_t ⊗ A)  (chunk, bd, N); drive_t = (Δ_t x_t) ⊗ B_t
+    decay = jnp.exp(dt[:, :, None] * a[None])
+    drive = (dt * xi)[:, :, None] * b[:, None, :]
+
+    # log-depth associative scan within the chunk (VMEM-resident)
+    def combine(lhs, rhs):
+        dl, vl = lhs
+        dr, vr = rhs
+        return dl * dr, vr + dr * vl
+
+    pdecay, hloc = jax.lax.associative_scan(combine, (decay, drive), axis=0)
+
+    h_in = hout_ref[0]                           # (bd, N) carry
+    h = hloc + pdecay * h_in[None]               # carry-in contribution
+    y_ref[0, :, :] = jnp.einsum(
+        "tdn,tn->td", h, c, preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+    hout_ref[0, :, :] = h[-1]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_d", "chunk", "interpret"),
+)
+def selective_scan_pallas(
+    xi: jnp.ndarray,      # (B, S, d_inner)  post-conv pre-gate inputs
+    dt: jnp.ndarray,      # (B, S, d_inner)  softplus'd Δ
+    b: jnp.ndarray,       # (B, S, N)
+    c: jnp.ndarray,       # (B, S, N)
+    a: jnp.ndarray,       # (d_inner, N)     negative continuous-time A
+    h0: jnp.ndarray,      # (B, d_inner, N)  initial state
+    *,
+    block_d: int = 256,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B, S, d_inner) f32 pre-D/gate, h_final (B, d_inner, N)).
+
+    S must divide ``chunk`` and d_inner ``block_d`` (ops.py pads).
+    """
+    bsz, s, d = xi.shape
+    n = b.shape[-1]
+    assert s % chunk == 0 and d % block_d == 0, (s, d, chunk, block_d)
+    grid = (bsz, d // block_d, s // chunk)
+
+    y, h_out = pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, chunk, block_d), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, t: (i, t, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j, t: (i, t, 0)),
+            pl.BlockSpec((block_d, n), lambda i, j, t: (j, 0)),
+            pl.BlockSpec((1, block_d, n), lambda i, j, t: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda i, j, t: (i, t, j)),
+            # carry state: revisited across the sequential chunk axis
+            pl.BlockSpec((1, block_d, n), lambda i, j, t: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xi, dt, b, c, a, h0)
+    return y, h_out
+
+

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+The two lines above run before ANY other import (jax locks the device count
+on first init): the dry-run — and only the dry-run — sees 512 placeholder
+host devices so ``jax.make_mesh`` can build the production meshes.
+
+For every cell we:
+  1. build (step_fn, abstract_inputs) via launch/steps.py,
+  2. ``jax.jit(fn, donate_argnums=...).lower(*abstract)`` →  ``.compile()``,
+  3. print ``compiled.memory_analysis()`` (fits-in-HBM proof) and
+     ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parse collective bytes from the HLO and emit the three roofline terms,
+  5. append a JSON record to ``results/dryrun_<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun                       # every cell, both meshes
+  python -m repro.launch.dryrun --arch gemma2_2b      # one arch
+  python -m repro.launch.dryrun --shape train_4k --mesh single
+  python -m repro.launch.dryrun --arch flash_sdkde_1m # paper workload cells
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.flops import model_flops, sdkde_flops
+from repro.analysis.roofline import roofline_from_compiled
+from repro.configs import (
+    KDE_WORKLOADS,
+    LM_SHAPES,
+    SHAPES,
+    get_arch,
+    list_archs,
+)
+from repro.launch.mesh import make_production_mesh, mesh_desc
+from repro.launch.steps import build_cell, make_kde_step
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, *, verbose: bool = True):
+    """Lower+compile one cell; returns the roofline record dict."""
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    if arch_id in KDE_WORKLOADS:
+        wl = KDE_WORKLOADS[arch_id]
+        fn, abstract, donate = make_kde_step(wl, mesh)
+        mf = sdkde_flops(wl.n_train, wl.dim, n_test=wl.n_test)
+        shape_name = f"{wl.n_train}x{wl.n_test}xd{wl.dim}"
+    else:
+        arch = get_arch(arch_id)
+        shape = SHAPES[shape_name]
+        skip = arch.shape_applicable(shape)
+        if skip:
+            return {
+                "arch": arch_id, "shape": shape_name,
+                "mesh": mesh_desc(mesh), "status": "skip", "reason": skip,
+            }
+        fn, abstract, donate = build_cell(arch, shape, mesh)
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops(arch.model, tokens, training=True)
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops(arch.model, tokens, training=False)
+        else:  # decode: one token per sequence
+            mf = model_flops(arch.model, shape.global_batch, training=False)
+
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*abstract)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+
+    terms = roofline_from_compiled(
+        compiled,
+        arch=arch_id,
+        shape=shape_name,
+        mesh_desc=mesh_desc(mesh),
+        chips=chips,
+        model_flops=mf,
+    )
+    rec = terms.row()
+    rec["status"] = "ok"
+    rec["compile_s"] = time.time() - t0
+    rec["memory_analysis"] = str(mem)
+    rec["collectives"] = terms.collective_detail
+
+    if verbose:
+        print(f"== {arch_id} / {shape_name} @ {mesh_desc(mesh)} ==")
+        print(f"   memory_analysis: {mem}")
+        print(
+            "   cost_analysis: flops/device=%.3e bytes/device=%.3e"
+            % (rec["hlo_flops"], rec["hlo_bytes"])
+        )
+        print(
+            "   roofline: t_comp=%.2fms t_mem=%.2fms t_coll=%.2fms"
+            " bound=%s MFU@roofline=%.1f%% useful=%.2f"
+            % (
+                rec["t_compute_s"] * 1e3,
+                rec["t_memory_s"] * 1e3,
+                rec["t_collective_s"] * 1e3,
+                rec["bound"],
+                rec["mfu"] * 100,
+                rec["useful_ratio"],
+            )
+        )
+        print(f"   compile took {rec['compile_s']:.1f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, kde workload id, or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    if args.arch == "all":
+        arch_ids = list(list_archs()) + list(KDE_WORKLOADS)
+    else:
+        arch_ids = [args.arch]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        records = []
+        for arch_id in arch_ids:
+            if arch_id in KDE_WORKLOADS:
+                shape_names = ["paper"]
+            elif args.shape == "all":
+                shape_names = [s.name for s in LM_SHAPES]
+            else:
+                shape_names = [args.shape]
+            for shape_name in shape_names:
+                try:
+                    rec = run_cell(arch_id, shape_name, mesh)
+                    records.append(rec)
+                    if rec["status"] == "ok":
+                        n_ok += 1
+                    else:
+                        n_skip += 1
+                        print(f"-- skip {arch_id}/{shape_name}: {rec['reason']}")
+                except Exception as e:  # a failure here is a bug in the system
+                    n_fail += 1
+                    traceback.print_exc()
+                    records.append({
+                        "arch": arch_id, "shape": shape_name,
+                        "mesh": mesh_desc(mesh), "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                    })
+        path = os.path.join(args.out, f"dryrun_{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {path} ({len(records)} cells)")
+    print(f"DONE: {n_ok} ok, {n_skip} skips, {n_fail} FAILURES")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

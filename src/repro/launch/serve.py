@@ -1,0 +1,114 @@
+"""Serving driver: batched prefill + decode with the serve_step program.
+
+Demonstrates the inference path end-to-end on CPU (reduced configs):
+prefill a batch of prompts (building the KV/SSM cache), then greedy-decode
+N tokens per sequence with the single-token serve_step, reporting decode
+throughput.  The decode program is the same one the decode_32k / long_500k
+dry-run cells lower at production shapes.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch falcon_mamba_7b \\
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.synthetic import lm_batch
+from repro.models.common import init_params, param_count
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--monitor", action="store_true",
+                    help="SD-KDE activation-density OOD monitor (§4.3)")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    arch = dataclasses.replace(arch, model=arch.model.reduced(dtype=jnp.float32))
+    cfg = arch.model
+    print(f"arch={arch.arch_id} params={param_count(cfg)/1e6:.2f}M")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    batch = lm_batch(cfg, args.seed, 0, args.batch, args.prompt_len)
+    max_len = args.prompt_len + args.gen + (
+        cfg.n_patches if cfg.family == "vlm" else 0
+    )
+
+    # Prefill: build a max_len cache, copy the prompt K/V in.
+    t0 = time.time()
+    logits, pcache = jax.jit(
+        lambda p, b: prefill(p, b["tokens"], cfg,
+                             patches=b.get("patches"),
+                             frames=b.get("frames"))
+    )(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms")
+
+    cache = init_cache(cfg, args.batch, max_len)
+    for k in pcache:
+        if k in ("pos",):
+            continue
+        if k in ("conv", "ssm"):
+            cache[k] = pcache[k]
+        else:  # kv-like: (L, B, S, H, hd) -> left-aligned into max_len
+            s = pcache[k].shape[2]
+            cache[k] = jax.lax.dynamic_update_slice(
+                cache[k], pcache[k].astype(cache[k].dtype), (0, 0, 0, 0, 0)
+            )
+    cache["pos"] = pcache["pos"]
+
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg),
+                   donate_argnums=(1,))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.gen):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"decode: {args.gen} steps x batch {args.batch} in {dt:.2f}s "
+          f"({args.gen*args.batch/dt:.1f} tok/s)")
+
+    if args.monitor:
+        # SD-KDE over pooled hidden states: flag OOD requests at serve time.
+        from repro.core.monitor import ActivationMonitor, pool_activations
+        from repro.models.transformer import forward_hidden
+
+        def acts(tokens):
+            h, _ = forward_hidden(params, tokens, cfg)
+            return pool_activations(h)
+
+        ref = jnp.concatenate([
+            acts(lm_batch(cfg, args.seed, s, 16, args.prompt_len)["tokens"])
+            for s in range(8)
+        ])
+        mon = ActivationMonitor(proj_dim=8, quantile=0.02).fit(ref)
+        flags = np.asarray(mon.flag(acts(batch["tokens"])))
+        print(f"monitor: {int(flags.sum())}/{args.batch} requests flagged "
+              f"OOD (in-distribution traffic)")
+    print(f"sample generations (token ids):")
+    for row in gen[: min(2, args.batch)]:
+        print("  ", row[:16].tolist(), "...")
+    assert np.isfinite(np.asarray(logits)).all(), "non-finite logits"
+
+
+if __name__ == "__main__":
+    main()

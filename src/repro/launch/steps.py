@@ -1,0 +1,400 @@
+"""Step-program builders: the compiled units behind train / serve / dry-run.
+
+For every (architecture × shape) cell this module produces
+``(step_fn, abstract_inputs, donate_argnums)`` where ``abstract_inputs`` are
+ShapeDtypeStructs carrying NamedShardings — ``jax.jit(fn).lower(*abstract)``
+is exactly the multi-pod dry-run, and the same builders feed the real
+train/serve drivers with concrete arrays.
+
+Sharding policy (see DESIGN.md §6):
+  * params        — Megatron TP over ``model`` (models/common.param_shapes);
+                    kimi additionally 2-D-shards experts over ``data``.
+  * optimizer     — ZeRO-1: master/moments extend the param spec over
+                    (pod, data) where a dim divides.
+  * train batch   — (microbatches, global/mb, S) with the batch dim over
+                    (pod, data); accumulation scans the leading axis.
+  * prefill batch — (B, S) batch over (pod, data).
+  * decode cache  — batch over (pod, data) when divisible (decode_32k),
+                    else the 524k cache SEQUENCE is sharded over
+                    (pod, data) and heads over ``model`` (long_500k, B=1).
+  * SD-KDE        — 2-D ring decomposition (distributed/ring2d.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, KdeWorkload, ShapeCfg
+from repro.data.synthetic import batch_pspecs
+from repro.launch.mesh import batch_axes
+from repro.models.common import ModelConfig, param_shapes
+from repro.models.transformer import (
+    cache_spec,
+    decode_step,
+    loss_fn,
+    prefill,
+)
+from repro.optim.adafactor import adafactor_state_pspecs, adafactor_update
+from repro.optim.adamw import AdamWConfig, adamw_update, opt_state_pspecs
+from repro.optim.clipping import clip_by_global_norm
+from repro.optim.schedules import cosine_schedule
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return batch_axes(mesh)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def abstract_from_pspecs(shapes_dtypes, pspecs, mesh: Mesh):
+    """pytree of (shape, dtype) + pytree of P -> pytree of ShapeDtypeStruct."""
+    return jax.tree.map(
+        lambda sd, spec: jax.ShapeDtypeStruct(
+            sd[0], sd[1], sharding=_named(mesh, spec)
+        ),
+        shapes_dtypes,
+        pspecs,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer abstract state.
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        name: jax.ShapeDtypeStruct(shape, dt, sharding=_named(mesh, spec))
+        for name, (shape, dt, spec) in param_shapes(cfg).items()
+    }
+
+
+def abstract_opt_state(arch: ArchSpec, mesh: Mesh):
+    cfg = arch.model
+    shapes = param_shapes(cfg)
+    dp_ax = _dp_axes(mesh)
+    axis = dp_ax if len(dp_ax) > 1 else dp_ax[0]
+    dp = _dp_size(mesh)
+
+    if arch.optimizer == "adafactor":
+        specs = adafactor_state_pspecs(shapes, dp, axis=axis)
+        out: Dict[str, Any] = {
+            "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                         sharding=_named(mesh, P())),
+            "master": {}, "v": {},
+        }
+        for name, (shape, _, _) in shapes.items():
+            out["master"][name] = jax.ShapeDtypeStruct(
+                shape, jnp.float32,
+                sharding=_named(mesh, specs["master"][name]),
+            )
+            vspec = specs["v"][name]
+            if "vr" in vspec:
+                out["v"][name] = {
+                    "vr": jax.ShapeDtypeStruct(
+                        shape[:-1], jnp.float32,
+                        sharding=_named(mesh, vspec["vr"])),
+                    "vc": jax.ShapeDtypeStruct(
+                        shape[:-2] + shape[-1:], jnp.float32,
+                        sharding=_named(mesh, vspec["vc"])),
+                }
+            else:
+                out["v"][name] = {
+                    "v": jax.ShapeDtypeStruct(
+                        shape, jnp.float32,
+                        sharding=_named(mesh, vspec["v"])),
+                }
+        return out
+
+    specs = opt_state_pspecs(shapes, dp, axis=axis)
+    out = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=_named(mesh, P())),
+        "master": {}, "mu": {}, "nu": {},
+    }
+    for name, (shape, _, _) in shapes.items():
+        for part in ("master", "mu", "nu"):
+            out[part][name] = jax.ShapeDtypeStruct(
+                shape, jnp.float32,
+                sharding=_named(mesh, specs[part][name]),
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step.
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(arch: ArchSpec, mesh: Mesh, shape: ShapeCfg, *,
+                    peak_lr: float = 3e-4, warmup: int = 2000,
+                    total_steps: int = 100_000):
+    """Returns (train_step, abstract_inputs, donate_argnums).
+
+    train_step(params, opt_state, batch) -> (params', opt_state', metrics).
+    Gradient accumulation scans the leading microbatch axis; the optimizer
+    update happens once per global step (grads are reduced by GSPMD across
+    (pod, data) automatically through the loss mean).
+    """
+    cfg = arch.model
+    accum_dtype = jnp.dtype(arch.accum_dtype)
+    use_adafactor = arch.optimizer == "adafactor"
+
+    def train_step(params, opt_state, batch):
+        def micro_loss(p, mb):
+            return loss_fn(p, mb, cfg)
+
+        def accum_body(acc, mb):
+            g_acc, loss_acc = acc
+            loss, g = jax.value_and_grad(micro_loss)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype), g_acc, g
+            )
+            return (g_acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params
+        )
+        (grads, loss_sum), _ = jax.lax.scan(
+            accum_body, (zeros, jnp.float32(0.0)), batch
+        )
+        nmb = shape.microbatches
+        grads = jax.tree.map(lambda g: g / nmb, grads)
+        loss = loss_sum / nmb
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(opt_state["step"], peak_lr, warmup, total_steps)
+        if use_adafactor:
+            new_params, new_state = adafactor_update(
+                grads, opt_state, params, lr
+            )
+        else:
+            new_params, new_state = adamw_update(
+                grads, opt_state, params, lr, AdamWConfig()
+            )
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+    abstract = (
+        abstract_params(cfg, mesh),
+        abstract_opt_state(arch, mesh),
+        abstract_train_batch(cfg, mesh, shape),
+    )
+    return train_step, abstract, (0, 1)
+
+
+def abstract_train_batch(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg):
+    """(microbatches, global/mb, ...) inputs, batch dim over (pod, data).
+
+    Generated pre-split by the loader so no resharding is needed between
+    accumulation steps (data/synthetic.py produces the same layout).
+    """
+    dp_ax = _dp_axes(mesh)
+    nmb = shape.microbatches
+    assert shape.global_batch % nmb == 0
+    mb = shape.global_batch // nmb
+    assert mb % _dp_size(mesh) == 0, (
+        f"microbatch {mb} not divisible by dp={_dp_size(mesh)}"
+    )
+    out = {
+        "tokens": jax.ShapeDtypeStruct(
+            (nmb, mb, shape.seq_len), jnp.int32,
+            sharding=_named(mesh, P(None, dp_ax, None)),
+        )
+    }
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (nmb, mb, cfg.n_patches, cfg.d_model), cfg.dtype,
+            sharding=_named(mesh, P(None, dp_ax, None, None)),
+        )
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (nmb, mb, cfg.enc_frames, cfg.d_model), cfg.dtype,
+            sharding=_named(mesh, P(None, dp_ax, None, None)),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefill step.
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(arch: ArchSpec, mesh: Mesh, shape: ShapeCfg):
+    cfg = arch.model
+
+    def prefill_step(params, batch):
+        return prefill(
+            params, batch["tokens"], cfg,
+            patches=batch.get("patches"), frames=batch.get("frames"),
+        )
+
+    dp_ax = _dp_axes(mesh)
+    assert shape.global_batch % _dp_size(mesh) == 0
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32,
+            sharding=_named(mesh, P(dp_ax, None)),
+        )
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.n_patches, cfg.d_model), cfg.dtype,
+            sharding=_named(mesh, P(dp_ax, None, None)),
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.enc_frames, cfg.d_model), cfg.dtype,
+            sharding=_named(mesh, P(dp_ax, None, None)),
+        )
+    abstract = (abstract_params(cfg, mesh), batch)
+    return prefill_step, abstract, ()
+
+
+# ---------------------------------------------------------------------------
+# Decode step.
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                 seq_len: int) -> Dict[str, P]:
+    """Decode-cache shardings (explicit NamedShardings must divide evenly).
+
+    decode_32k (batch ≥ dp): batch over (pod, data); KV heads over ``model``
+    when n_kv_heads divides it, otherwise the cache SEQUENCE is split over
+    ``model`` (flash-decoding-style split-KV — GQA configs with 2–8 KV
+    heads can't use 16-way head parallelism).
+    long_500k (batch=1): the sequence axis carries ALL the parallelism —
+    KV seq over every mesh axis; SSM states shard d_inner over ``model``.
+    """
+    mp = mesh.shape["model"]
+    dp_ax = _dp_axes(mesh)
+    all_ax = tuple(mesh.axis_names)
+    batch_sharded = batch % _dp_size(mesh) == 0
+    kv_heads_ok = cfg.n_kv_heads % mp == 0
+
+    if batch_sharded:
+        b = dp_ax
+        if kv_heads_ok:
+            kv = P(None, b, None, "model", None)
+        elif seq_len % mp == 0:
+            kv = P(None, b, "model", None, None)
+        else:
+            kv = P(None, b, None, None, None)
+    else:
+        b = None
+        seq_ax = all_ax if seq_len % mesh.devices.size == 0 else dp_ax
+        kv = P(None, None, seq_ax, None, None)
+
+    specs: Dict[str, P] = {}
+    if not cfg.attn_free:
+        specs["k"] = specs["v"] = kv
+        if cfg.kv_quant:
+            # int8 scales: (L, B, S, Hkv) — the kv spec minus the head-dim
+            specs["k_scale"] = specs["v_scale"] = P(*list(kv)[:-1])
+    if cfg.family in ("ssm", "hybrid"):
+        specs["conv"] = P(None, b, None, "model")
+        specs["ssm"] = P(None, b, "model", None)
+    if cfg.family == "audio":
+        # cross-attn cache: enc_frames (1500) and 20 heads don't divide the
+        # model axis — batch sharding only.
+        specs["xk"] = specs["xv"] = P(None, b, None, None, None)
+    specs["pos"] = P()
+    return specs
+
+
+def make_decode_step(arch: ArchSpec, mesh: Mesh, shape: ShapeCfg):
+    """serve_step: ONE new token against a seq_len cache (decode_* cells)."""
+    cfg = arch.model
+
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg)
+
+    b = shape.global_batch
+    specs = cache_pspecs(cfg, mesh, b, shape.seq_len)
+    cache_abstract: Dict[str, Any] = {}
+    for name, (shp, dt) in cache_spec(cfg, b, shape.seq_len).items():
+        cache_abstract[name] = jax.ShapeDtypeStruct(
+            shp, dt, sharding=_named(mesh, specs[name])
+        )
+    cache_abstract["pos"] = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=_named(mesh, P())
+    )
+    dp_ax = _dp_axes(mesh)
+    tok_spec = P(dp_ax, None) if b % _dp_size(mesh) == 0 else P(None, None)
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=_named(mesh, tok_spec)
+    )
+    abstract = (abstract_params(cfg, mesh), cache_abstract, tokens)
+    return serve_step, abstract, (1,)
+
+
+# ---------------------------------------------------------------------------
+# SD-KDE cells (the paper's own workloads on the production mesh).
+# ---------------------------------------------------------------------------
+
+
+def make_kde_step(workload: KdeWorkload, mesh: Mesh, *, chunk: int = 2048):
+    from repro.distributed.ring2d import kde_input_specs, ring2d_sdkde
+
+    h = 0.2  # bandwidth enters as a traced constant; value is irrelevant
+    # to lowering/roofline (same program for any h > 0)
+
+    def kde_step(x, y):
+        return ring2d_sdkde(x, y, h, mesh=mesh, chunk=chunk)
+
+    x_spec, y_spec = kde_input_specs(
+        workload.n_train, workload.n_test, workload.dim, mesh
+    )
+    return kde_step, (x_spec, y_spec), ()
+
+
+# ---------------------------------------------------------------------------
+# Cell dispatch (the dry-run's entry point).
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: ArchSpec, shape: ShapeCfg, mesh: Mesh):
+    # Register the mesh for the MoE shard-local dispatch, the attention
+    # sharding hints (train/prefill), and the weights-stationary MoE decode
+    # path (trace-time global; see models/parallel.py, models/moe.py).
+    from repro.models.parallel import set_mesh
+
+    set_mesh(mesh)
+    if shape.kind == "train":
+        if arch.train_microbatches:
+            import dataclasses
+
+            shape = dataclasses.replace(
+                shape, microbatches=arch.train_microbatches
+            )
+        return make_train_step(arch, mesh, shape)
+    if shape.kind == "prefill":
+        return make_prefill_step(arch, mesh, shape)
+    if shape.kind == "decode":
+        return make_decode_step(arch, mesh, shape)
+    raise ValueError(shape.kind)
+
+
+def input_specs(arch_or_kde, shape: Optional[ShapeCfg], mesh: Mesh):
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, sharded, no device allocation (brief §dry-run.2)."""
+    if isinstance(arch_or_kde, KdeWorkload):
+        return make_kde_step(arch_or_kde, mesh)[1]
+    return build_cell(arch_or_kde, shape, mesh)[1]

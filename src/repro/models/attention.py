@@ -1,0 +1,191 @@
+"""GQA attention: full, memory-efficient (chunked online-softmax), decode.
+
+Supports grouped-query attention, causal and sliding-window masks, logit
+softcapping (gemma2), and RoPE variants.  For long sequences the chunked
+path streams KV blocks with an online softmax (flash-attention re-ordering
+in pure JAX) so activation memory stays O(S·chunk) instead of O(S²) — the
+same IO-aware re-ordering philosophy as the paper's KDE kernels, applied to
+the LM substrate.
+
+Shapes: q (B,S,Hq,hd), k/v (B,S,Hkv,hd); GQA groups G = Hq//Hkv.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.layers import softcap
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+CHUNKED_THRESHOLD = 8192   # use online-softmax streaming above this S
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (prompt lengths like
+    32768+2880 patch tokens or whisper's 1500 frames aren't chunk
+    multiples; the streaming path must still tile them exactly)."""
+    target = min(target, n)
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _mask(
+    qpos: jnp.ndarray,   # (Sq,) positions of queries
+    kpos: jnp.ndarray,   # (Sk,) positions of keys
+    *,
+    causal: bool,
+    window,              # None | int | traced scalar
+) -> jnp.ndarray:
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _scores(qg, k, scale, cap):
+    # qg: (B,Sq,Hkv,G,hd), k: (B,Sk,Hkv,hd) -> (B,Hkv,G,Sq,Sk)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    return softcap(s, cap)
+
+
+def full_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    cap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    s = _scores(qg, k, 1.0 / math.sqrt(hd), cap)
+    mask = _mask(jnp.arange(sq), jnp.arange(sk), causal=causal, window=window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(b, sq, hq, hd)
+
+
+def chunked_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    cap: Optional[float] = None,
+    q_chunk: int = Q_CHUNK,
+    kv_chunk: int = KV_CHUNK,
+) -> jnp.ndarray:
+    """Online-softmax attention streaming KV chunks: O(S·chunk) memory."""
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = _pick_chunk(sq, q_chunk)
+    kv_chunk = _pick_chunk(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qg = q.reshape(b, nq, q_chunk, hkv, g, hd)
+    kc = k.reshape(b, nk, kv_chunk, hkv, hd)
+    vc = v.reshape(b, nk, kv_chunk, hkv, hd)
+
+    def q_body(qi, q_blk):
+        # q_blk: (b, q_chunk, hkv, g, hd)
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            s = _scores(q_blk, k_blk, scale, cap)  # (b,hkv,g,qc,kc)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(qpos, kpos, causal=causal, window=window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (b,hkv,g,qc,hd) -> (b,qc,hkv,g,hd)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    outs = jax.lax.map(lambda args: q_body(*args),
+                       (jnp.arange(nq), qg.swapaxes(0, 1)))
+    # (nq, b, qc, hkv, g, hd) -> (b, sq, hq, hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window=None,
+    cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dispatch: full for short sequences, streaming for long ones."""
+    if q.shape[1] >= CHUNKED_THRESHOLD or k.shape[1] >= CHUNKED_THRESHOLD:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 cap=cap)
+    return full_attention(q, k, v, causal=causal, window=window, cap=cap)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, Hq, hd) — the new token's query
+    k_cache: jnp.ndarray,  # (B, S, Hkv, hd)
+    v_cache: jnp.ndarray,
+    pos,                   # scalar: index of the new token
+    *,
+    window=None,
+    cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-step decode: new query against the (length-masked) KV cache."""
+    b, _, hq, hd = q.shape
+    sk, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    s = _scores(qg, k_cache, 1.0 / math.sqrt(hd), cap)  # (b,hkv,g,1,S)
+    kpos = jnp.arange(sk)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= pos - kpos < window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
+    return o.reshape(b, 1, hq, hd)
+
+
+def qkv_project(x, lp, cfg: ModelConfig, positions, prefix: str = "w"):
+    """Project to q/k/v heads and apply RoPE."""
+    b, s, _ = x.shape
+    q = (x @ lp[prefix + "q"].astype(x.dtype)).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (x @ lp[prefix + "k"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (x @ lp[prefix + "v"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, theta=cfg.rope_theta, variant=cfg.rope_variant)
+    k = apply_rope(k, positions, theta=cfg.rope_theta, variant=cfg.rope_variant)
+    return q, k, v

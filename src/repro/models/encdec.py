@@ -1,0 +1,115 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB).
+
+Per the assignment, the audio frontend is stubbed: the encoder consumes
+precomputed frame embeddings (B, T_enc, d_model) from ``input_specs()``.
+The encoder is a bidirectional transformer; the decoder is the shared
+``transformer.decoder_layer`` stack plus cross-attention to the encoder
+output (cross K/V precomputed once per request and carried in the cache).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, layer_tree
+from repro.models.layers import embed_tokens, mlp, rmsnorm
+
+
+def encoder_layer(x, lp, cfg: ModelConfig):
+    h = rmsnorm(x, lp["attn_norm"])
+    b, s, _ = h.shape
+    q = (h @ lp["wq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (h @ lp["wk"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (h @ lp["wv"].astype(h.dtype)).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    o = attn.attention(q, k, v, causal=False)  # bidirectional, no RoPE
+    x = x + o.reshape(b, s, cfg.q_dim) @ lp["wo"].astype(h.dtype)
+    h = rmsnorm(x, lp["mlp_norm"])
+    return x + mlp(h, lp, cfg)
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Frame embeddings -> encoder hidden states."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)[None]
+    lt = layer_tree(params, "enc_layers/")
+
+    def body(x, lp):
+        return encoder_layer(x, lp, cfg), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, lt)
+    return rmsnorm(x, params["enc_final_norm"])
+
+
+def _cross_attend(x, lp, enc, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h = rmsnorm(x, lp["xattn_norm"])
+    q = (h @ lp["xwq"].astype(h.dtype)).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (enc @ lp["xwk"].astype(enc.dtype)).reshape(
+        b, enc.shape[1], cfg.n_kv_heads, cfg.hd
+    )
+    v = (enc @ lp["xwv"].astype(enc.dtype)).reshape(
+        b, enc.shape[1], cfg.n_kv_heads, cfg.hd
+    )
+    o = attn.attention(q, k, v, causal=False)
+    return o.reshape(b, s, cfg.q_dim) @ lp["xwo"].astype(h.dtype)
+
+
+def encdec_hidden(
+    params: Dict,
+    frames: jnp.ndarray,    # (B, T_enc, d) stub frame embeddings
+    tokens: jnp.ndarray,    # (B, S) decoder token ids
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full enc-dec forward to decoder hidden states; returns (h, aux)."""
+    from repro.models.attention import qkv_project
+    from repro.models.transformer import layer_windows
+
+    enc = encode(params, frames, cfg)
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(x.shape[1])
+    lt = layer_tree(params)
+    windows = layer_windows(cfg)
+
+    def body(carry, inputs):
+        x, aux = carry
+        lp, window = inputs
+        h = rmsnorm(x, lp["attn_norm"])
+        q, k, v = qkv_project(h, lp, cfg, positions)
+        o = attn.attention(q, k, v, causal=True, window=window,
+                           cap=cfg.attn_softcap)
+        x = x + o.reshape(*x.shape[:-1], cfg.q_dim) @ lp["wo"].astype(x.dtype)
+        x = x + _cross_attend(x, lp, enc, cfg)
+        h = rmsnorm(x, lp["mlp_norm"])
+        x = x + mlp(h, lp, cfg)
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), (lt, windows))
+    return rmsnorm(x, params["final_norm"]), aux
+
+
+def prefill_cross_cache(
+    params: Dict, frames: jnp.ndarray, cfg: ModelConfig
+) -> Dict[str, jnp.ndarray]:
+    """Precompute per-layer cross K/V from the encoder output (serving)."""
+    enc = encode(params, frames, cfg)
+    lt = layer_tree(params)
+    b, t = enc.shape[0], enc.shape[1]
+
+    def body(_, lp):
+        k = (enc @ lp["xwk"].astype(enc.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd
+        )
+        v = (enc @ lp["xwv"].astype(enc.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd
+        )
+        return None, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+    _, (xk, xv) = jax.lax.scan(body, None, lt)
+    return {"xk": xk, "xv": xv}

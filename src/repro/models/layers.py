@@ -1,0 +1,66 @@
+"""Shared building blocks: norms, MLPs, embeddings, logits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, one_plus: bool = False,
+            eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if one_plus else w.astype(jnp.float32)
+    return (x * scale).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind in ("swiglu",):
+        return jax.nn.silu(x)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp(x: jnp.ndarray, lp: dict, cfg: ModelConfig,
+        prefix: str = "") -> jnp.ndarray:
+    """Gated (SwiGLU/GeGLU) or plain (GELU/ReLU²) feed-forward."""
+    up = x @ lp[prefix + "w_up"].astype(x.dtype)
+    if cfg.gated:
+        gate = _act(x @ lp[prefix + "w_gate"].astype(x.dtype), cfg.act)
+        h = gate * up
+    else:
+        h = _act(up, cfg.act)
+    return h @ lp[prefix + "w_down"].astype(x.dtype)
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0).astype(cfg.dtype)
+    # common convention (gemma/whisper): scale by sqrt(d)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    return x
+
+
+def logits_head(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    out = x @ w
+    return softcap(out.astype(jnp.float32), cfg.final_softcap)

@@ -1,0 +1,76 @@
+"""Trace-time mesh registry + sharding hints for the model code.
+
+The model definitions are mesh-agnostic; step builders register the mesh
+here and the layers drop GSPMD ``with_sharding_constraint`` hints where the
+partitioner's default choice is catastrophic (measured in EXPERIMENTS.md
+§Perf):
+
+  * attention Q and the attention output are SEQUENCE-sharded over
+    ``model`` during training — head-sharding is impossible for most
+    assigned configs (24/25/8/20/56 heads vs a 16-way axis) and GSPMD's
+    fallback was to shard the CONTRACTION dim, all-reducing (S×S) score
+    tensors per layer (768 MB × 3 ops × layers × microbatches on granite);
+  * the MoE layer runs fully-manual (models/moe.py) under the same mesh.
+
+With no mesh registered every hint is a no-op (single-device smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: list = [None]
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _MESH[0] = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH[0]
+
+
+@contextlib.contextmanager
+def model_mesh(mesh: Optional[Mesh]):
+    prev = _MESH[0]
+    _MESH[0] = mesh
+    try:
+        yield
+    finally:
+        _MESH[0] = prev
+
+
+def dp_axes(mesh=None) -> Tuple[str, ...]:
+    mesh = mesh or _MESH[0]
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data")
+                 if a in mesh.axis_names and mesh.shape[a] > 1)
+
+
+def hint(x, *entries):
+    """with_sharding_constraint when a mesh is registered and divisibility
+    holds; otherwise identity.  ``entries`` are PartitionSpec entries; use
+    the string "dp" for the batch axes."""
+    mesh = _MESH[0]
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh)
+    resolved = []
+    for dim, e in zip(x.shape, entries):
+        if e == "dp":
+            e = dp if dp else None
+        if e is not None:
+            size = 1
+            for a in (e if isinstance(e, tuple) else (e,)):
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                e = None          # indivisible: leave to the partitioner
+        resolved.append(e)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )

@@ -1,0 +1,41 @@
+"""Rotary position embeddings: full-dim and half-dim (chatglm 2d) variants."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rotate(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply standard interleaved-pair RoPE over the full last dim.
+
+    x: (..., S, H, D) with D even; positions: (..., S) int32.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    theta: float = 10000.0,
+    variant: str = "full",
+) -> jnp.ndarray:
+    """Apply RoPE.  ``variant='half'`` rotates only the first half of the head
+    dim (chatglm's 2d rope), leaving the rest as-is."""
+    if variant == "half":
+        d = x.shape[-1]
+        rot = _rotate(x[..., : d // 2], positions, theta)
+        return jnp.concatenate([rot, x[..., d // 2 :]], axis=-1)
+    return _rotate(x, positions, theta)

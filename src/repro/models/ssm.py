@@ -1,0 +1,138 @@
+"""Mamba1 selective-SSM block (falcon-mamba; also the SSM half of hymba).
+
+Training path uses an associative scan over the sequence (parallel,
+TPU-friendly: log-depth instead of the GPU kernel's sequential smem scan —
+the hardware adaptation of Mamba's selective-scan).  Decode path carries
+(conv_state, ssm_state) and costs O(1) per token, which is what makes the
+``long_500k`` cell tractable for this family.
+
+Recurrence (per channel c, state dim n):
+  h_t = exp(Δ_t A) ⊙ h_{t-1} + Δ_t B_t x_t
+  y_t = C_t · h_t + D x_t
+with A diagonal (d_inner, N), B/C input-dependent (selective).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+def _ssm_proj(x_in: jnp.ndarray, lp: dict, cfg: ModelConfig):
+    """Input-dependent Δ, B, C from the x-projection."""
+    n, dtr = cfg.ssm_state, cfg.dt_rank
+    xbc = x_in @ lp["x_proj"].astype(x_in.dtype)          # (..., dtr+2N)
+    dt, b, c = jnp.split(xbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ lp["dt_proj"].astype(x_in.dtype) + lp["dt_bias"].astype(x_in.dtype)
+    )                                                      # (..., d_inner)
+    return dt, b, c
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over the sequence. x: (B,S,di), w: (dc,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(dc)
+    )
+    return out + b[None, None, :]
+
+
+def mamba_block(
+    x: jnp.ndarray,            # (B, S, d_model)
+    lp: dict,
+    cfg: ModelConfig,
+    *,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba1 block via associative scan.
+
+    With ``return_state`` also returns (conv_state, ssm_state) at the end of
+    the sequence — the prefill path for serving.
+    """
+    xz = x @ lp["in_proj"].astype(x.dtype)                  # (B,S,2di)
+    xi_pre, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_conv1d(xi_pre, lp["conv_w"].astype(x.dtype),
+                             lp["conv_b"].astype(x.dtype)))
+
+    dt, b, c = _ssm_proj(xi, lp, cfg)                       # (B,S,di),(B,S,N)x2
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))           # (di, N)
+
+    if cfg.ssm_kernel:
+        # Chunked Pallas selective scan: state stays in VMEM, the
+        # (B,S,di,N) decay/drive tensors never hit HBM (the SSM-prefill
+        # memory bottleneck in EXPERIMENTS.md §Roofline).
+        from repro.kernels.selective_scan import selective_scan_pallas
+
+        h0 = jnp.zeros((x.shape[0], cfg.d_inner, cfg.ssm_state),
+                       jnp.float32)
+        y, h_last = selective_scan_pallas(
+            xi, dt, b, c, a, h0,
+            block_d=min(256, cfg.d_inner), chunk=min(128, x.shape[1]),
+            interpret=jax.default_backend() == "cpu",
+        )
+        hs = None
+    else:
+        # Discretize: decay = exp(Δ A), drive = Δ B x (ZOH for B ≈ Euler).
+        dt32 = dt.astype(jnp.float32)
+        decay = jnp.exp(dt32[..., None] * a[None, None])    # (B,S,di,N)
+        drive = (dt32 * xi.astype(jnp.float32))[..., None] * b.astype(
+            jnp.float32
+        )[..., None, :]                                     # (B,S,di,N)
+
+        # h_t = decay_t ⊙ h_{t-1} + drive_t — first-order linear
+        # recurrence: associative over pairs (decay, drive).
+        def combine(l, r):
+            dl, vl = l
+            dr, vr = r
+            return dl * dr, vr + dr * vl
+
+        _, hs = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c.astype(jnp.float32))
+        h_last = hs[:, -1]
+    y = y + lp["D"].astype(jnp.float32)[None, None] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ lp["out_proj"].astype(x.dtype)
+    if return_state:
+        dc = cfg.ssm_conv
+        conv_state = xi_pre[:, -(dc - 1):, :]               # (B, dc-1, di)
+        return out, conv_state, h_last                      # (B, di, N)
+    return out
+
+
+def mamba_decode_step(
+    x: jnp.ndarray,            # (B, 1, d_model)
+    conv_state: jnp.ndarray,   # (B, dc-1, d_inner)
+    ssm_state: jnp.ndarray,    # (B, d_inner, N)
+    lp: dict,
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) single-token decode; returns (out, conv_state', ssm_state')."""
+    xz = x[:, 0] @ lp["in_proj"].astype(x.dtype)            # (B,2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    w = lp["conv_w"].astype(x.dtype)                        # (dc, di)
+    dc = w.shape[0]
+    window = jnp.concatenate([conv_state, xi[:, None, :]], axis=1)  # (B,dc,di)
+    conv = jnp.einsum("bcd,cd->bd", window, w) + lp["conv_b"].astype(x.dtype)
+    xi = jax.nn.silu(conv)
+    conv_state = window[:, 1:]
+
+    dt, b, c = _ssm_proj(xi, lp, cfg)                       # (B,di),(B,N)x2
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * a[None])              # (B,di,N)
+    drive = (dt32 * xi.astype(jnp.float32))[..., None] * b.astype(jnp.float32)[
+        :, None, :
+    ]
+    ssm_state = decay * ssm_state + drive
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c.astype(jnp.float32))
+    y = y + lp["D"].astype(jnp.float32)[None] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ lp["out_proj"].astype(x.dtype))[:, None, :]
+    return out, conv_state, ssm_state

@@ -1,0 +1,516 @@
+"""Decoder-only LM: scan-over-layers forward, decode-with-cache, loss.
+
+One generic layer body covers the dense / MoE / SSM / hybrid / VLM families
+(static Python dispatch on ``cfg.family`` — resolved at trace time).  Layers
+are scanned over stacked parameters so compile time is independent of depth;
+``jax.checkpoint`` wraps the body when ``cfg.remat == 'full'``.
+
+Sliding-window / global alternation (gemma2) is handled by passing a
+*numeric* per-layer window (huge window ≡ global) through the scan, avoiding
+per-layer retracing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, layer_tree
+from repro.models.layers import embed_tokens, logits_head, mlp, rmsnorm
+from repro.models.moe import moe_ffn
+from repro.models.parallel import hint
+from repro.models.ssm import mamba_block, mamba_decode_step
+
+GLOBAL_WINDOW = jnp.int32(2**30)
+
+
+def layer_windows(cfg: ModelConfig, n_layers: Optional[int] = None):
+    """Per-layer attention window (traced through the scan). Huge == global."""
+    n = n_layers or cfg.n_layers
+    if cfg.local_global_alt and cfg.sliding_window:
+        # even layers local (window), odd layers global — gemma2 convention
+        idx = jnp.arange(n)
+        return jnp.where(idx % 2 == 0, cfg.sliding_window, GLOBAL_WINDOW)
+    if cfg.sliding_window:
+        return jnp.full((n,), cfg.sliding_window, jnp.int32)
+    return jnp.full((n,), GLOBAL_WINDOW, jnp.int32)
+
+
+def _norm(x, lp, key, cfg):
+    return rmsnorm(x, lp[key], one_plus=cfg.rms_one_plus)
+
+
+def _seq_shard_qkv(q, k, v, cfg: ModelConfig):
+    """Sequence-sharded attention for training (§Perf attention fix).
+
+    Head counts that don't divide the 16-way ``model`` axis (8/20/24/25/56
+    in the assigned pool) leave GSPMD sharding the score einsum's
+    CONTRACTION dim — all-reducing (S×S)-sized score tensors per layer
+    (measured: 3×768 MB × layers × microbatches on granite).  Sharding Q
+    (and the attention output) on the SEQUENCE axis keeps every
+    (S_loc × S) score tile device-local; K/V replicate over ``model`` and
+    the only cross-device step left is the cheap (S, q_dim) reshard around
+    wo.
+
+    Archs whose heads DO divide the axis (32/64 heads) keep GSPMD's native
+    head-sharding — measured better there (minitron train t_coll 10.5 s
+    hinted-seq vs 16.6 s; the hints are strictly conditional).  No-op
+    without a registered mesh.
+    """
+    from repro.models.parallel import get_mesh
+
+    mesh = get_mesh()
+    if mesh is None:
+        return q, k, v
+    use = cfg.seq_shard_attn
+    if use is None:
+        use = cfg.n_heads % mesh.shape["model"] != 0
+    if not use:
+        return q, k, v
+    q = hint(q, "dp", "model", None, None)
+    k = hint(k, "dp", None, None, None)
+    v = hint(v, "dp", None, None, None)
+    return q, k, v
+
+
+def _attn_sublayer(x, lp, cfg, positions, window):
+    h = _norm(x, lp, "attn_norm", cfg)
+    q, k, v = attn.qkv_project(h, lp, cfg, positions)
+    q2, k2, v2 = _seq_shard_qkv(q, k, v, cfg)
+    o = attn.attention(q2, k2, v2, causal=True, window=window,
+                       cap=cfg.attn_softcap)
+    if q2 is not q:
+        o = hint(o, "dp", "model", None, None)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim) @ lp["wo"].astype(x.dtype)
+    if cfg.post_norms:
+        o = _norm(o, lp, "post_attn_norm", cfg)
+    return o
+
+
+def _ffn_sublayer(x, lp, cfg):
+    # Un-shard the sequence axis before the FFN: with seq-sharded
+    # activations GSPMD all-gathers the (d, d_ff) WEIGHTS to preserve the
+    # activation sharding (measured: 6×525 GiB per step on llava — §Perf);
+    # gathering the (B, S, d) activations instead costs 20× less and
+    # restores the standard column→row-parallel MLP pattern.  No-op when
+    # no mesh is registered or the dim is indivisible.
+    x = hint(x, "dp", None, None)
+    h = _norm(x, lp, "mlp_norm", cfg)
+    if cfg.family == "moe":
+        b, s, d = h.shape
+        out, aux = moe_ffn(h.reshape(b * s, d), lp, cfg)
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = mlp(h, lp, cfg), 0.0
+    if cfg.post_norms:
+        out = _norm(out, lp, "post_mlp_norm", cfg)
+    return out, aux
+
+
+def decoder_layer(
+    x: jnp.ndarray,
+    lp: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    window,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer; returns (x', aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        x = x + mamba_block(_norm(x, lp, "ssm_norm", cfg), lp, cfg)
+        return x, aux
+    if cfg.family == "hybrid":
+        h = _norm(x, lp, "attn_norm", cfg)
+        q, k, v = attn.qkv_project(h, lp, cfg, positions)
+        q2, k2, v2 = _seq_shard_qkv(q, k, v, cfg)
+        a = attn.attention(q2, k2, v2, causal=True, window=window,
+                           cap=cfg.attn_softcap)
+        if q2 is not q:
+            a = hint(a, "dp", "model", None, None)
+        a = a.reshape(*x.shape[:-1], cfg.q_dim) @ lp["wo"].astype(x.dtype)
+        s = mamba_block(h, lp, cfg)
+        s = rmsnorm(s, lp["ssm_norm"], one_plus=cfg.rms_one_plus)
+        fused = (
+            lp["fuse_attn_scale"].astype(x.dtype) * a
+            + lp["fuse_ssm_scale"].astype(x.dtype) * s
+        )
+        x = x + fused
+        out, aux2 = _ffn_sublayer(x, lp, cfg)
+        return x + out, aux + aux2
+    # dense / moe / vlm / audio decoder self-attention
+    x = x + _attn_sublayer(x, lp, cfg, positions, window)
+    out, aux2 = _ffn_sublayer(x, lp, cfg)
+    return x + out, aux + aux2
+
+
+def _scan_layers(x, params, cfg, positions, body):
+    lt = layer_tree(params)
+    windows = layer_windows(cfg)
+
+    def wrapped(carry, inputs):
+        x, aux = carry
+        lp, window = inputs
+        x, aux2 = body(x, lp, cfg, positions, window)
+        return (x, aux + aux2), None
+
+    if cfg.remat == "full":
+        wrapped = jax.checkpoint(wrapped)
+    (x, aux), _ = jax.lax.scan(wrapped, (x, jnp.float32(0.0)), (lt, windows))
+    return x, aux
+
+
+def forward_hidden(
+    params: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token ids -> final hidden states (after final norm); returns (h, aux)."""
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm forward requires patch embeddings"
+        p = patches.astype(cfg.dtype) @ params["patch_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([p, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, aux = _scan_layers(x, params, cfg, positions, decoder_layer)
+    x = rmsnorm(x, params["final_norm"], one_plus=cfg.rms_one_plus)
+    return x, aux
+
+
+def lm_loss(
+    params: Dict[str, jnp.ndarray],
+    hidden: jnp.ndarray,      # (B, S, d)
+    targets: jnp.ndarray,     # (B, S) next-token ids
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy, sequence-chunked over the vocab GEMM.
+
+    Chunking bounds the (B, chunk, V) logits temporary — without it the
+    full (B, S, V) logits dominate activation memory at 256k vocab.
+    """
+    b, s, d = hidden.shape
+    chunk = cfg.loss_chunk or s
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(tot, inputs):
+        h, t = inputs
+        logits = logits_head(params, h, cfg)              # (B, chunk, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, tc))
+    return tot / (b * s)
+
+
+def loss_fn(
+    params: Dict[str, jnp.ndarray],
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Next-token LM loss over a batch {'tokens', optional 'patches'/'frames'}."""
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_hidden
+
+        hidden, aux = encdec_hidden(params, batch["frames"], tokens, cfg)
+        text_hidden = hidden
+    else:
+        hidden, aux = forward_hidden(
+            params, tokens, cfg, patches=batch.get("patches")
+        )
+        # VLM: loss only on the text positions (after the patch prefix).
+        text_hidden = hidden[:, -tokens.shape[1]:]
+    targets = jnp.roll(tokens, -1, axis=1)
+    loss = lm_loss(params, text_hidden[:, :-1], targets[:, :-1], cfg)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill (serving) path: forward over the prompt, building the decode cache.
+# ---------------------------------------------------------------------------
+
+
+def prefill_layer(
+    x: jnp.ndarray,
+    lp: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    window,
+    *,
+    enc: Optional[jnp.ndarray] = None,
+):
+    """One layer of prompt processing; returns (x', per-layer cache entries).
+
+    Mirrors ``decoder_layer`` but captures the K/V (and SSM states) that the
+    decode path will extend — the ys of the layer scan stack into the
+    (L, ...) cache layout of ``cache_spec``.
+    """
+    ce: Dict[str, jnp.ndarray] = {}
+
+    if cfg.family == "ssm":
+        out, conv, ssm = mamba_block(
+            _norm(x, lp, "ssm_norm", cfg), lp, cfg, return_state=True
+        )
+        ce["conv"], ce["ssm"] = conv.astype(cfg.dtype), ssm
+        return x + out, ce
+
+    if cfg.family == "hybrid":
+        h = _norm(x, lp, "attn_norm", cfg)
+        q, k, v = attn.qkv_project(h, lp, cfg, positions)
+        ce["k"], ce["v"] = k, v
+        a = attn.attention(q, k, v, causal=True, window=window,
+                           cap=cfg.attn_softcap)
+        a = a.reshape(*x.shape[:-1], cfg.q_dim) @ lp["wo"].astype(x.dtype)
+        s, conv, ssm = mamba_block(h, lp, cfg, return_state=True)
+        ce["conv"], ce["ssm"] = conv.astype(cfg.dtype), ssm
+        s = rmsnorm(s, lp["ssm_norm"], one_plus=cfg.rms_one_plus)
+        x = x + (
+            lp["fuse_attn_scale"].astype(x.dtype) * a
+            + lp["fuse_ssm_scale"].astype(x.dtype) * s
+        )
+        out, _ = _ffn_sublayer(x, lp, cfg)
+        return x + out, ce
+
+    # dense / moe / vlm / audio decoder
+    h = _norm(x, lp, "attn_norm", cfg)
+    q, k, v = attn.qkv_project(h, lp, cfg, positions)
+    ce["k"], ce["v"] = k, v
+    o = attn.attention(q, k, v, causal=True, window=window,
+                       cap=cfg.attn_softcap)
+    o = o.reshape(*x.shape[:-1], cfg.q_dim) @ lp["wo"].astype(x.dtype)
+    if cfg.post_norms:
+        o = _norm(o, lp, "post_attn_norm", cfg)
+    x = x + o
+    if cfg.family == "audio":
+        assert enc is not None
+        b, t = enc.shape[0], enc.shape[1]
+        xk = (enc @ lp["xwk"].astype(enc.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd
+        )
+        xv = (enc @ lp["xwv"].astype(enc.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.hd
+        )
+        ce["xk"], ce["xv"] = xk, xv
+        hx = _norm(x, lp, "xattn_norm", cfg)
+        qx = (hx @ lp["xwq"].astype(hx.dtype)).reshape(
+            *hx.shape[:-1], cfg.n_heads, cfg.hd
+        )
+        ox = attn.attention(qx, xk, xv, causal=False)
+        x = x + ox.reshape(*x.shape[:-1], cfg.q_dim) @ lp["xwo"].astype(x.dtype)
+    out, _ = _ffn_sublayer(x, lp, cfg)
+    return x + out, ce
+
+
+def prefill(
+    params: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,          # (B, S) prompt tokens
+    cfg: ModelConfig,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+    frames: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Prompt pass: returns (last-position logits (B, V), decode cache).
+
+    Cache max_len equals the processed sequence length (patch prefix
+    included for VLM); the serving driver re-allocates with headroom when
+    generation continues past it.
+    """
+    x = embed_tokens(params, tokens, cfg)
+    enc = None
+    if cfg.family == "vlm":
+        assert patches is not None
+        p = patches.astype(cfg.dtype) @ params["patch_proj"].astype(cfg.dtype)
+        x = jnp.concatenate([p, x], axis=1)
+    if cfg.family == "audio":
+        from repro.models.encdec import encode
+
+        assert frames is not None
+        enc = encode(params, frames, cfg)
+    positions = jnp.arange(x.shape[1])
+    lt = layer_tree(params)
+    windows = layer_windows(cfg)
+
+    def body(carry, inputs):
+        lp, window = inputs
+        x, ce = prefill_layer(carry, lp, cfg, positions, window, enc=enc)
+        return x, ce
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, (lt, windows))
+    x = rmsnorm(x, params["final_norm"], one_plus=cfg.rms_one_plus)
+    logits = logits_head(params, x[:, -1:], cfg)
+    cache = dict(caches)
+    cache["pos"] = jnp.int32(tokens.shape[1])
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving) path.
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(
+    cfg: ModelConfig, batch: int, max_len: int
+) -> Dict[str, Tuple[Tuple[int, ...], jnp.dtype]]:
+    """Shapes/dtypes of the decode cache (shardings chosen by the launcher)."""
+    l, hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    spec: Dict[str, Tuple[Tuple[int, ...], jnp.dtype]] = {}
+    if not cfg.attn_free:
+        kv_dt = jnp.int8 if cfg.kv_quant else cfg.dtype
+        spec["k"] = ((l, batch, max_len, hkv, hd), kv_dt)
+        spec["v"] = ((l, batch, max_len, hkv, hd), kv_dt)
+        if cfg.kv_quant:
+            spec["k_scale"] = ((l, batch, max_len, hkv), jnp.float32)
+            spec["v_scale"] = ((l, batch, max_len, hkv), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        spec["conv"] = ((l, batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.dtype)
+        spec["ssm"] = ((l, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    if cfg.family == "audio":
+        spec["xk"] = ((l, batch, cfg.enc_frames, hkv, hd), cfg.dtype)
+        spec["xv"] = ((l, batch, cfg.enc_frames, hkv, hd), cfg.dtype)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    cache = {
+        name: jnp.zeros(shape, dt)
+        for name, (shape, dt) in cache_spec(cfg, batch, max_len).items()
+    }
+    cache["pos"] = jnp.int32(0)
+    return cache
+
+
+def decode_layer(
+    x: jnp.ndarray,            # (B, 1, d)
+    lp: Dict[str, jnp.ndarray],
+    cache_l: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    pos,
+    window,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode through one layer; returns (x', updated cache)."""
+    new_cache = dict(cache_l)
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+
+    def quant(x):
+        # symmetric per-(position, head) int8; scale (B, 1, Hkv)
+        s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+        s = jnp.maximum(s, 1e-12)
+        q8 = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return q8, s
+
+    def attend(h, prefix="w", cache_k="k", cache_v="v", cross=False):
+        if cross:
+            b = h.shape[0]
+            q = (h @ lp["xwq"].astype(h.dtype)).reshape(
+                b, 1, cfg.n_heads, cfg.hd
+            )
+            k_c, v_c = cache_l["xk"], cache_l["xv"]
+            o = attn.decode_attention(
+                q, k_c, v_c, jnp.int32(cfg.enc_frames - 1), cap=None
+            )
+            return o.reshape(b, 1, cfg.q_dim) @ lp["xwo"].astype(h.dtype)
+        q, k, v = attn.qkv_project(h, lp, cfg, positions, prefix=prefix)
+        if cfg.kv_quant:
+            # int8 cache: HBM reads halve vs bf16; dequant multiplies fuse
+            # into the attention reads (EXPERIMENTS.md §Perf decode note).
+            k8, ks = quant(k)
+            v8, vs = quant(v)
+            k_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_k], k8, (0, pos, 0, 0))
+            v_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_v], v8, (0, pos, 0, 0))
+            ks_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_k + "_scale"], ks, (0, pos, 0))
+            vs_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_v + "_scale"], vs, (0, pos, 0))
+            new_cache[cache_k], new_cache[cache_v] = k_c, v_c
+            new_cache[cache_k + "_scale"] = ks_c
+            new_cache[cache_v + "_scale"] = vs_c
+            k_full = k_c.astype(h.dtype) * ks_c[..., None].astype(h.dtype)
+            v_full = v_c.astype(h.dtype) * vs_c[..., None].astype(h.dtype)
+        else:
+            k_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_k], k.astype(cache_l[cache_k].dtype),
+                (0, pos, 0, 0))
+            v_c = jax.lax.dynamic_update_slice(
+                cache_l[cache_v], v.astype(cache_l[cache_v].dtype),
+                (0, pos, 0, 0))
+            new_cache[cache_k], new_cache[cache_v] = k_c, v_c
+            k_full, v_full = k_c, v_c
+        o = attn.decode_attention(q, k_full, v_full, pos, window=window,
+                                  cap=cfg.attn_softcap)
+        return o.reshape(h.shape[0], 1, cfg.q_dim) @ lp["wo"].astype(h.dtype)
+
+    def ssm_step(h):
+        out, conv, ssm = mamba_decode_step(
+            h, cache_l["conv"], cache_l["ssm"], lp, cfg
+        )
+        new_cache["conv"], new_cache["ssm"] = conv, ssm
+        return out
+
+    if cfg.family == "ssm":
+        x = x + ssm_step(_norm(x, lp, "ssm_norm", cfg))
+        return x, new_cache
+    if cfg.family == "hybrid":
+        h = _norm(x, lp, "attn_norm", cfg)
+        a = attend(h)
+        s = ssm_step(h)
+        s = rmsnorm(s, lp["ssm_norm"], one_plus=cfg.rms_one_plus)
+        x = x + (
+            lp["fuse_attn_scale"].astype(x.dtype) * a
+            + lp["fuse_ssm_scale"].astype(x.dtype) * s
+        )
+        out, _ = _ffn_sublayer(x, lp, cfg)
+        return x + out, new_cache
+
+    h = _norm(x, lp, "attn_norm", cfg)
+    a = attend(h)
+    if cfg.post_norms:
+        a = _norm(a, lp, "post_attn_norm", cfg)
+    x = x + a
+    if cfg.family == "audio":
+        xh = _norm(x, lp, "xattn_norm", cfg)
+        x = x + attend(xh, cross=True)
+    out, _ = _ffn_sublayer(x, lp, cfg)
+    return x + out, new_cache
+
+
+def decode_step(
+    params: Dict[str, jnp.ndarray],
+    cache: Dict,
+    tokens: jnp.ndarray,       # (B, 1) the newest token ids
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One serving step: logits for the next token + updated cache."""
+    pos = cache["pos"]
+    x = embed_tokens(params, tokens, cfg)
+    lt = layer_tree(params)
+    windows = layer_windows(cfg)
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x, inputs):
+        lp_w, cache_l = inputs
+        lp, window = lp_w
+        x, new_cache = decode_layer(x, lp, cache_l, cfg, pos, window)
+        return x, new_cache
+
+    x, new_layer_caches = jax.lax.scan(body, x, ((lt, windows), layer_caches))
+    x = rmsnorm(x, params["final_norm"], one_plus=cfg.rms_one_plus)
+    logits = logits_head(params, x, cfg)
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    return logits[:, 0], new_cache

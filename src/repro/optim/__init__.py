@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    opt_state_pspecs,
+)
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.clipping import clip_by_global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_pspecs",
+    "adafactor_init",
+    "adafactor_update",
+    "cosine_schedule",
+    "linear_warmup",
+    "clip_by_global_norm",
+]

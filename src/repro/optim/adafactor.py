@@ -1,0 +1,104 @@
+"""Adafactor: factored second moments, sub-linear optimizer memory.
+
+For the ~1T-parameter cells (kimi-k2) even bf16 Adam moments are the
+difference between fitting one pod or needing two; Adafactor stores row/col
+second-moment factors (O(n+m) per matrix instead of O(n·m)) and no first
+moment, shrinking optimizer state to roughly the master-copy size.
+
+Reference: Shazeer & Stern, 2018.  Matches adamw.py's pure-pytree API.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: Dict[str, jnp.ndarray]):
+    def init_one(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),        # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params
+    )
+    v = {k: init_one(p) for k, p in params.items()}
+    return {"step": jnp.int32(0), "master": master, "v": v}
+
+
+def adafactor_state_pspecs(param_shapes, data_size: int, *, axis="data"):
+    """PartitionSpecs matching ``adafactor_init``'s structure.
+
+    Masters get ZeRO-1 extension (adamw.opt_state_pspecs rules); the factored
+    moments inherit the param spec with the averaged-out dim dropped.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.optim.adamw import _zero1_spec
+
+    master, v = {}, {}
+    for name, (shape, _, spec) in param_shapes.items():
+        master[name] = _zero1_spec(shape, spec, data_size, axis)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if _factored(shape):
+            v[name] = {
+                "vr": P(*entries[:-1]),
+                "vc": P(*(entries[:-2] + entries[-1:])),
+            }
+        else:
+            v[name] = {"v": P(*entries)}
+    return {"step": P(), "master": master, "v": v}
+
+
+def adafactor_update(
+    grads: Dict[str, jnp.ndarray],
+    state,
+    params: Dict[str, jnp.ndarray],
+    lr,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Dict[str, jnp.ndarray], dict]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)                 # increasing-decay schedule
+
+    def upd(g, m, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if "vr" in v:
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            u = g * jax.lax.rsqrt(
+                vr[..., None] / jnp.maximum(denom[..., None], eps)
+            ) * jax.lax.rsqrt(vc[..., None, :])
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vf = beta * v["v"] + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(vf)
+            v_new = {"v": vf}
+        # update clipping (RMS <= threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        m_new = m - lr * (u + weight_decay * m)
+        return m_new, v_new
+
+    new_master, new_v = {}, {}
+    for k in params:
+        new_master[k], new_v[k] = upd(grads[k], state["master"][k],
+                                      state["v"][k])
+    new_params = {k: new_master[k].astype(params[k].dtype) for k in params}
+    return new_params, {"step": step, "master": new_master, "v": new_v}

@@ -1,0 +1,20 @@
+"""Global-gradient-norm clipping (pytree-wide, sharding-transparent)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, pre_clip_norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm

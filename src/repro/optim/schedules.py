@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, peak_lr: float, warmup_steps: int):
+    s = jnp.minimum(step.astype(jnp.float32), warmup_steps)
+    return peak_lr * s / jnp.maximum(warmup_steps, 1)
+
+
+def cosine_schedule(step, peak_lr: float, warmup_steps: int,
+                    total_steps: int, final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+    s = step.astype(jnp.float32)
+    warm = linear_warmup(step, peak_lr, warmup_steps)
+    prog = jnp.clip(
+        (s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,158 @@
+"""Analysis layer: paper flop model, HLO parsers, roofline arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.flops import (
+    sdkde_bytes,
+    sdkde_flops,
+    sdkde_flops_1d,
+    sdkde_flops_coefficient,
+    sdkde_intensity,
+)
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.hlo_exec import analyze_hlo, breakdown, parse_module
+from repro.analysis.roofline import HW, RooflineTerms
+
+
+# -- paper §4.1 flop model (validated against the paper's own numbers) -----
+
+
+def test_flop_coefficient_matches_paper():
+    assert abs(sdkde_flops_coefficient(16) - 81.5) < 1e-9
+
+
+def test_flops_at_32k_order_1e11():
+    f = sdkde_flops(32768)
+    assert 5e10 < f < 2e11          # "on the order of 10^11 FLOPs" (§4.1)
+
+
+def test_bytes_coefficient_matches_paper():
+    c = sdkde_bytes(32768) / 32768**2
+    assert abs(c - 1.13) < 0.02     # "≈ 1.13 k² bytes"
+
+
+def test_intensity_matches_paper():
+    i = sdkde_intensity(32768)
+    assert 70 < i < 75              # "≈ 72 flops/byte"
+    # compute-bound on the A6000 (tensor-core balance ~200, fp32 roof ~50):
+    assert i > 50
+
+
+def test_1d_model_appendix():
+    f = sdkde_flops_1d(32768)
+    assert abs(f - 17.75 * 32768**2) < 1e-6 * f
+
+
+# -- HLO executable analyzer -------------------------------------------------
+
+
+def test_analyzer_scan_flops_exact():
+    def body(c, _):
+        return c @ c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ).compile().as_text()
+    s = analyze_hlo(txt)
+    np.testing.assert_allclose(s.flops, 7 * 2 * 64**3, rtol=0.02)
+
+
+def test_analyzer_vs_xla_on_loop_free_program():
+    """Without loops the analyzer must agree with XLA's own count."""
+    def f(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    args = [jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in [(32, 128), (128, 256), (256, 64)]]
+    compiled = jax.jit(f).lower(*args).compile()
+    s = analyze_hlo(compiled.as_text())
+    xla = compiled.cost_analysis()
+    if isinstance(xla, list):
+        xla = xla[0]
+    np.testing.assert_allclose(s.flops, float(xla["flops"]), rtol=0.1)
+
+
+def test_analyzer_nested_scan_multiplies():
+    def inner(c, _):
+        return c @ c, None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=3)
+        return c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ).compile().as_text()
+    s = analyze_hlo(txt)
+    np.testing.assert_allclose(s.flops, 15 * 2 * 32**3, rtol=0.05)
+    assert s.unknown_trip_loops == 0
+
+
+def test_analyzer_exponential_transcendentals():
+    def f(x):
+        return jnp.exp(x).sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((1024,), jnp.float32)
+    ).compile().as_text()
+    s = analyze_hlo(txt)
+    assert s.transcendentals >= 1024
+
+
+def test_breakdown_rows_ordered():
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=4)
+        return y
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ).compile().as_text()
+    rows = breakdown(txt, top=5)
+    assert rows and rows[0]["trips"] == 4
+
+
+def test_collective_parser_text_fixture():
+    txt = """
+  %all-reduce.1 = f32[1024]{0} all-reduce(%x), to_apply=%sum
+  %ag = bf16[64,512]{1,0} all-gather(%y), dimensions={1}
+  %cp = f32[32,32]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    agg = collective_bytes(txt)
+    assert agg["all-reduce_bytes"] == 4096
+    assert agg["all-gather_bytes"] == 64 * 512 * 2
+    assert agg["collective-permute_bytes"] == 32 * 32 * 4
+    assert agg["wire_bytes"] == 2 * 4096 + 64 * 512 * 2 + 32 * 32 * 4
+
+
+# -- roofline arithmetic ------------------------------------------------------
+
+
+def test_roofline_terms_and_bound():
+    t = RooflineTerms(
+        arch="a", shape="s", mesh="m", chips=256,
+        hlo_flops=197e12 * 0.010,          # 10 ms of compute
+        hlo_bytes=819e9 * 0.005,           # 5 ms of HBM
+        collective_bytes=50e9 * 0.020,     # 20 ms of ICI
+        model_flops=197e12 * 0.010 * 256 * 0.5,
+    )
+    assert abs(t.t_compute - 0.010) < 1e-12
+    assert abs(t.t_memory - 0.005) < 1e-12
+    assert abs(t.t_collective - 0.020) < 1e-12
+    assert t.bound == "collective"
+    assert abs(t.step_time - 0.020) < 1e-12
+    assert abs(t.useful_flops_ratio - 0.5) < 1e-9
+    assert abs(t.mfu - 0.010 * 0.5 / 0.020) < 1e-9

@@ -1,0 +1,169 @@
+"""Fault-tolerance substrate: supervisor, restart loop, straggler dispatch,
+elastic mesh planning, gradient compression."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (
+    compress,
+    decompress,
+    init_residual,
+)
+from repro.distributed.elastic import plan_mesh, rebatch, reshard_specs
+from repro.distributed.fault import RestartLoop, Supervisor
+from repro.distributed.straggler import DuplicateDispatcher, pick_backup
+
+
+# -- supervisor --------------------------------------------------------------
+
+
+def test_supervisor_failure_detection():
+    clock = [0.0]
+    sup = Supervisor(4, timeout=10.0, clock=lambda: clock[0])
+    for h in range(4):
+        sup.beat(h, 1)
+    clock[0] = 5.0
+    for h in (0, 1, 2):
+        sup.beat(h, 2)
+    assert sup.dead_hosts() == []
+    clock[0] = 12.0     # host 3 last beat at t=0 -> dead; 0-2 beat at t=5
+    assert sup.dead_hosts() == [3]
+    plan = sup.restart_plan(spare_hosts=0)
+    assert plan["action"] == "shrink" and plan["new_size"] == 3
+    plan = sup.restart_plan(spare_hosts=2)
+    assert plan["action"] == "replace"
+
+
+def test_supervisor_straggler_detection():
+    clock = [0.0]
+    sup = Supervisor(4, timeout=1e9, straggler_factor=2.0,
+                     clock=lambda: clock[0])
+    # hosts 0-2 step every 1s; host 3 every 10s
+    for step in range(1, 6):
+        for h in (0, 1, 2):
+            clock[0] = step * 1.0
+            sup.beat(h, step)
+        clock[0] = step * 10.0
+        sup.beat(3, step)
+    assert sup.stragglers() == [3]
+    assert sup.fleet_step() == 5
+
+
+def test_restart_loop_resumes_from_checkpoint():
+    executed = []
+    saved = {"step": 0}
+
+    loop = RestartLoop(
+        step_fn=lambda i: executed.append(i),
+        save_fn=lambda s: saved.update(step=s),
+        restore_fn=lambda: saved["step"],
+        ckpt_every=10,
+    )
+    starts = loop.run(50, fail_at=25)
+    assert starts == 2
+    # steps 20..24 re-executed after restart from checkpoint at 20
+    assert executed == list(range(0, 25)) + list(range(20, 50))
+
+
+# -- straggler dispatch -------------------------------------------------------
+
+
+def test_duplicate_dispatch_backup_wins():
+    d = DuplicateDispatcher(deadline=0.05)
+
+    def work(host):
+        if host == 0:
+            time.sleep(0.5)    # straggling primary
+        return host
+
+    result, winner = d.run(work, primary=0, backup=1)
+    assert winner == 1 and result == 1
+    d.close()
+
+
+def test_duplicate_dispatch_primary_fast_path():
+    d = DuplicateDispatcher(deadline=1.0)
+    result, winner = d.run(lambda h: h, primary=0, backup=1)
+    assert winner == 0
+    d.close()
+
+
+def test_pick_backup_fastest():
+    assert pick_backup({0: 5.0, 1: 1.0, 2: 2.0}, straggler=0) == 1
+
+
+# -- elastic -------------------------------------------------------------------
+
+
+def test_plan_mesh_shrink():
+    p = plan_mesh(512, model_parallel=16, want_pods=2)
+    assert p.shape == (2, 16, 16)
+    p = plan_mesh(256, model_parallel=16)
+    assert p.shape == (16, 16)
+    # lost 16 hosts of 32 on one pod: 240 devices
+    p = plan_mesh(240, model_parallel=16)
+    assert p.shape == (15, 16) and p.note == ""
+    # awkward count: drops stragglers
+    p = plan_mesh(250, model_parallel=16)
+    assert p.n_devices <= 250
+
+
+def test_rebatch_exact_when_divisible():
+    per_dev, mb, new_gb = rebatch(256, old_dp=16, new_dp=8, microbatches=8)
+    assert per_dev * 8 * mb == 256 and new_gb == 256
+
+
+def test_rebatch_nearest_when_impossible():
+    # 15 hosts never tile 256 exactly -> nearest achievable multiple
+    per_dev, mb, new_gb = rebatch(256, old_dp=16, new_dp=15, microbatches=8)
+    assert new_gb == per_dev * 15 * mb
+    assert abs(new_gb - 256) <= 15 * mb // 2 + 1
+
+
+def test_reshard_specs_drops_dead_axes():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.elastic import make_mesh
+
+    plan = plan_mesh(1, model_parallel=1)
+    mesh = make_mesh(plan)
+    specs = reshard_specs(
+        {"w": P(("pod", "data"), "model"), "b": P(None, "pod")},
+        ("pod", "data", "model"), mesh,
+    )
+    assert specs["w"].spec == P(("data",), "model")
+    assert specs["b"].spec == P(None, None)
+
+
+# -- compression ----------------------------------------------------------------
+
+
+def test_int8_compression_error_feedback():
+    g = {"w": jnp.array([[0.5, -0.25], [1.0, 0.003]], jnp.float32)}
+    res = init_residual(g)
+    q, s, res1 = compress(g, res)
+    assert q["w"].dtype == jnp.int8
+    out = decompress(q, s)
+    # error feedback: residual + dequantized == original exactly
+    np.testing.assert_allclose(
+        np.asarray(out["w"] + res1["w"]), np.asarray(g["w"]), rtol=1e-6
+    )
+
+
+def test_compression_converges_with_feedback():
+    """Accumulated compressed updates track the true sum (unbiased-ish)."""
+    key = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros((64,))
+    got_sum = jnp.zeros((64,))
+    res = {"g": jnp.zeros((64,))}
+    for i in range(50):
+        g = {"g": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+        q, s, res = compress(g, res)
+        out = decompress(q, s)
+        true_sum = true_sum + g["g"]
+        got_sum = got_sum + out["g"]
+    err = float(jnp.linalg.norm(got_sum - true_sum) / jnp.linalg.norm(true_sum))
+    assert err < 0.02, err

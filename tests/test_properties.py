@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the estimator invariants (DESIGN.md §8).
+
+  * normalization: ∫p̂ ≈ 1 (grid in 1-D, importance sampling in d-D)
+  * translation / scale equivariance of the density
+  * permutation invariance in the training set
+  * the score-shift identity Σ_j (x_i−x_j)φ_ij = x_i·S0_i − S1_i
+    (the GEMM re-ordering the whole paper rests on)
+  * SD-KDE == KDE on oracle-score data with zero score
+  * Laplace fused ≡ non-fused
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kde
+from repro.core.bandwidth import silverman_bandwidth
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _points(seed, n, d, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(16, 128),
+       d=st.sampled_from([1, 2, 8, 16]))
+def test_score_shift_identity(seed, n, d):
+    """Σ_j (x_i−x_j)φ_ij == x_i S0_i − S1_i — Section 4's identity."""
+    x = _points(seed, n, d)
+    h = 0.7
+    s0, s1 = kde.score_stats(x, x, h, block=32)
+    # naive left side
+    diff = x[:, None, :] - x[None, :, :]
+    phi = jnp.exp(-jnp.sum(diff**2, -1) / (2 * h * h))
+    lhs = jnp.einsum("ijd,ij->id", diff, phi)
+    rhs = x * s0[:, None] - s1
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_normalization_1d(seed):
+    x = _points(seed, 200, 1)
+    h = float(silverman_bandwidth(x))
+    grid = jnp.linspace(-8, 8, 4001)[:, None]
+    p = kde.kde_eval(x, grid, h, block=64)
+    integral = float(jnp.sum(p) * (16 / 4000))
+    assert abs(integral - 1.0) < 2e-2
+
+    p_lc = kde.laplace_kde_eval(x, grid, h, block=64)
+    integral_lc = float(jnp.sum(p_lc) * (16 / 4000))
+    # Laplace correction integrates to 1 too (∫ΔK = 0)
+    assert abs(integral_lc - 1.0) < 2e-2
+
+    p_sd = kde.sdkde_eval(x, grid, h, block=64)
+    integral_sd = float(jnp.sum(p_sd) * (16 / 4000))
+    assert abs(integral_sd - 1.0) < 2e-2
+
+
+@given(seed=st.integers(0, 2**16),
+       shift=st.floats(-5, 5, allow_nan=False),
+       scale=st.floats(0.5, 3.0, allow_nan=False))
+def test_translation_scale_equivariance(seed, shift, scale):
+    """p̂_{aX+b}(a y + b) = p̂_X(y) / a^d for every estimator."""
+    d = 2
+    x = _points(seed, 100, d)
+    y = _points(seed + 1, 20, d)
+    h = 0.6
+    for fn in (kde.kde_eval, kde.laplace_kde_eval, kde.sdkde_eval):
+        p1 = fn(x, y, h, block=32)
+        p2 = fn(scale * x + shift, scale * y + shift, scale * h, block=32)
+        np.testing.assert_allclose(
+            np.asarray(p2) * scale**d, np.asarray(p1), rtol=5e-3, atol=1e-7
+        )
+
+
+@given(seed=st.integers(0, 2**16))
+def test_permutation_invariance(seed):
+    x = _points(seed, 64, 4)
+    y = _points(seed + 1, 16, 4)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 2), 64)
+    h = 0.8
+    p1 = kde.sdkde_eval(x, y, h, block=16)
+    p2 = kde.sdkde_eval(x[perm], y, h, block=16)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-4, atol=1e-8)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_laplace_fused_equals_nonfused(seed):
+    x = _points(seed, 90, 8)
+    y = _points(seed + 1, 30, 8)
+    h = 0.7
+    p1 = kde.laplace_kde_eval(x, y, h, block=32)
+    p2 = kde.laplace_kde_eval_nonfused(x, y, h, block=32)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-4, atol=1e-8)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_oracle_zero_score_reduces_to_kde(seed):
+    """With ŝ ≡ 0 the SD shift is the identity: SD-KDE == KDE."""
+    x = _points(seed, 80, 4)
+    y = _points(seed + 1, 20, 4)
+    h = 0.6
+    p_sd = kde.sdkde_eval_oracle(x, y, h, lambda z: jnp.zeros_like(z),
+                                 block=32)
+    p = kde.kde_eval(x, y, h, block=32)
+    np.testing.assert_allclose(np.asarray(p_sd), np.asarray(p), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), block=st.sampled_from([16, 32, 64, 1024]))
+def test_streaming_block_size_irrelevant(seed, block):
+    """The streaming accumulation must be block-size invariant."""
+    x = _points(seed, 130, 8)
+    y = _points(seed + 1, 25, 8)
+    h = 0.75
+    p_ref = kde.kde_eval_naive(x, y, h)
+    p = kde.kde_eval(x, y, h, block=block)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), rtol=2e-4)
+
+
+def test_padding_sentinel_is_exact_zero():
+    """exp(-‖pad − x‖²/2h²) must underflow to exactly 0.0 in f32."""
+    x = jnp.array([[kde.PAD_VALUE] * 4])
+    y = jnp.zeros((1, 4))
+    phi = jnp.exp(-jnp.sum((x - y) ** 2) / (2.0 * 100.0**2))
+    assert float(phi) == 0.0

@@ -1,0 +1,75 @@
+"""Allclose sweep: chunked Pallas selective scan vs the sequential oracle,
+and vs the model's associative-scan mamba path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import ref_selective_scan
+from repro.kernels.selective_scan import selective_scan_pallas
+
+SHAPES = [
+    # B, S, D, N, block_d, chunk
+    (1, 64, 32, 8, 16, 16),
+    (2, 128, 64, 16, 32, 32),
+    (2, 96, 48, 4, 16, 32),     # chunk > S/chunks alignment edge
+    (1, 256, 128, 16, 128, 64),
+]
+
+
+def _inputs(bsz, s, d, n, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    xi = jax.random.normal(ks[0], (bsz, s, d), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, s, d), dtype))
+    b = jax.random.normal(ks[2], (bsz, s, n), dtype)
+    c = jax.random.normal(ks[3], (bsz, s, n), dtype)
+    a = -jnp.exp(jax.random.normal(ks[4], (d, n), jnp.float32) * 0.5)
+    h0 = jax.random.normal(ks[5], (bsz, d, n), jnp.float32) * 0.1
+    return xi, dt, b, c, a, h0
+
+
+@pytest.mark.parametrize("bsz,s,d,n,bd,ck", SHAPES)
+def test_matches_sequential_oracle(bsz, s, d, n, bd, ck):
+    xi, dt, b, c, a, h0 = _inputs(bsz, s, d, n)
+    y, h = selective_scan_pallas(xi, dt, b, c, a, h0,
+                                 block_d=bd, chunk=ck, interpret=True)
+    y_ref, h_ref = ref_selective_scan(xi, dt, b, c, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_zero_initial_state_matches_mamba_block_scan():
+    """Cross-check against the model's associative-scan formulation."""
+    bsz, s, d, n = 2, 64, 32, 8
+    xi, dt, b, c, a, h0 = _inputs(bsz, s, d, n, seed=1)
+    h0 = jnp.zeros_like(h0)
+    y, _ = selective_scan_pallas(xi, dt, b, c, a, h0,
+                                 block_d=16, chunk=16, interpret=True)
+
+    # models/ssm.py inline recurrence (same math, log-depth over full S)
+    decay = jnp.exp(dt[..., None] * a[None, None])
+    drive = (dt * xi)[..., None] * b[..., None, :]
+
+    def combine(l, r):
+        dl, vl = l
+        dr, vr = r
+        return dl * dr, vr + dr * vl
+
+    _, hs = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y_ref = jnp.einsum("bsdn,bsn->bsd", hs, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_bf16_inputs_f32_accumulation():
+    bsz, s, d, n = 1, 64, 32, 8
+    xi, dt, b, c, a, h0 = _inputs(bsz, s, d, n, seed=2, dtype=jnp.bfloat16)
+    y, h = selective_scan_pallas(xi, dt, b, c, a, h0,
+                                 block_d=16, chunk=16, interpret=True)
+    y_ref, h_ref = ref_selective_scan(xi, dt, b, c, a, h0)
+    assert y.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,107 @@
+"""Statistical validation: SD-KDE / Laplace-KDE must actually debias.
+
+Reproduces the paper's core statistical claims at CPU scale:
+  * On the benchmark mixtures, SD-KDE and Laplace-KDE beat vanilla KDE's
+    MISE at equal n (Fig. 2/3 direction).
+  * Bias scaling on a standard Gaussian: the debiased estimators' bias
+    shrinks ~O(h⁴) vs KDE's O(h²) (Section 5 operator analysis).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kde
+from repro.core.bandwidth import sdkde_bandwidth, silverman_bandwidth
+from repro.core.metrics import oracle_errors
+from repro.core.mixtures import benchmark_mixture_1d, benchmark_mixture_16d
+
+
+def test_sdkde_beats_kde_mise_1d():
+    """At equal (Silverman) bandwidth the bias-corrected estimators must
+    beat vanilla KDE, with the paper's Fig-3 ordering: Laplace lowest MISE.
+
+    (The wider n^{-1/(d+8)} SD-rate bandwidth needs a re-calibrated
+    constant on multimodal targets — Silverman's constant is tuned to
+    near-Gaussian densities; see bandwidth.sdkde_bandwidth's ``scale``.)
+    """
+    mix = benchmark_mixture_1d()
+    key = jax.random.PRNGKey(0)
+    mises = {"kde": [], "sdkde": [], "laplace": []}
+    for seed in range(3):
+        x = mix.sample(jax.random.fold_in(key, seed), 2000)
+        h = float(silverman_bandwidth(x))
+        e_kde = oracle_errors(lambda g: kde.kde_eval(x, g, h, block=256), mix)
+        e_sd = oracle_errors(
+            lambda g: kde.sdkde_eval(x, g, h, block=256), mix
+        )
+        e_lc = oracle_errors(
+            lambda g: kde.laplace_kde_eval(x, g, h, block=256), mix
+        )
+        mises["kde"].append(e_kde.mise)
+        mises["sdkde"].append(e_sd.mise)
+        mises["laplace"].append(e_lc.mise)
+    kde_m = np.mean(mises["kde"])
+    assert np.mean(mises["sdkde"]) < kde_m, mises
+    assert np.mean(mises["laplace"]) < kde_m, mises
+    # Fig 3: the Laplace-corrected estimator attains the lowest MISE.
+    assert np.mean(mises["laplace"]) < np.mean(mises["sdkde"]), mises
+
+
+def test_sdkde_beats_kde_mise_16d():
+    mix = benchmark_mixture_16d()
+    key = jax.random.PRNGKey(1)
+    x = mix.sample(key, 4096)
+    h = float(silverman_bandwidth(x))
+    e_kde = oracle_errors(
+        lambda g: kde.kde_eval(x, g, h, block=512), mix, key, n_mc=4096
+    )
+    e_sd = oracle_errors(
+        lambda g: kde.sdkde_eval(x, g, h, block=512), mix, key, n_mc=4096
+    )
+    assert e_sd.mise < e_kde.mise, (e_sd, e_kde)
+    assert e_sd.miae < e_kde.miae, (e_sd, e_kde)  # Fig 2: SD-KDE lowest MIAE
+
+
+def test_bias_scaling_order():
+    """At a fixed point of a known Gaussian, KDE bias ~ h², corrected ~ h⁴.
+
+    Use the analytic expectation (the estimators are linear in the data for
+    KDE/Laplace): E[p̂] is a Gaussian convolution, evaluated by massive
+    sampling; we verify the bias RATIO between h and h/2 — ~4 for KDE
+    (order h²) and ~16 for Laplace (order h⁴).
+    """
+    key = jax.random.PRNGKey(2)
+    n = 200_000
+    x = jax.random.normal(key, (n, 1))
+    y = jnp.zeros((1, 1))
+    p_true = 1.0 / np.sqrt(2 * np.pi)
+
+    def bias(fn, h):
+        return abs(float(fn(x, y, h, block=8192)[0]) - p_true)
+
+    b_kde_h, b_kde_h2 = bias(kde.kde_eval, 0.5), bias(kde.kde_eval, 0.25)
+    ratio_kde = b_kde_h / max(b_kde_h2, 1e-12)
+    # O(h²): halving h divides bias by ~4
+    assert 2.5 < ratio_kde < 6.5, (b_kde_h, b_kde_h2)
+
+    b_lc_h = bias(kde.laplace_kde_eval, 0.5)
+    b_lc_h2 = bias(kde.laplace_kde_eval, 0.25)
+    ratio_lc = b_lc_h / max(b_lc_h2, 1e-12)
+    # O(h⁴): ratio ≈ 16, noisy at finite n — just require clearly super-h².
+    assert ratio_lc > 7.0, (b_lc_h, b_lc_h2)
+    # and the corrected estimator is less biased at equal h
+    assert b_lc_h < b_kde_h
+
+
+def test_negative_mass_is_small_but_nonzero_for_laplace():
+    """The signed-estimator diagnostic the paper logs (§5, §6.1)."""
+    mix = benchmark_mixture_1d()
+    x = mix.sample(jax.random.PRNGKey(3), 1000)
+    h = float(silverman_bandwidth(x)) * 1.5
+    e = oracle_errors(
+        lambda g: kde.laplace_kde_eval(x, g, h, block=256), mix
+    )
+    assert e.neg_mass >= 0.0
+    assert e.neg_mass < 0.05  # small relative to unit mass
