@@ -15,6 +15,7 @@ from benchmarks import (
     fig3_oracle_1d,
     fig4_fusion,
     fig5_utilization,
+    serve_throughput,
     table1_methods,
 )
 
@@ -34,6 +35,11 @@ def main() -> None:
     fig5_utilization.main(ns=(1024, 2048, 4096))
     print("# table1: method comparison at fixed size (paper Table 1)")
     table1_methods.main(n=8192)
+    print("# serve: query-serving qps / tail latency (repro.serve)")
+    serve_throughput.main(
+        n=1024, d=8, backends=("jnp", "pallas"),
+        batch_sizes=(8, 32), n_requests=8,
+    )
     print(f"# total {time.time() - t0:.1f}s")
 
 

@@ -1,0 +1,45 @@
+"""Version compatibility for the distributed layer.
+
+The ring schedules are written against the modern JAX surface
+(``jax.shard_map``, ``lax.pvary``).  Older jax releases (<= 0.4.x, like the
+0.4.37 in the CPU validation image) ship ``shard_map`` under
+``jax.experimental`` and have no ``pvary`` (varying-manual-axes tracking
+didn't exist yet, so marking a carry as axis-varying is a no-op there).
+Everything in ``repro.distributed`` goes through these two shims so the same
+ring code runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        # check_rep=False: the ring carries are device-varying by
+        # construction; the old replication checker can't see that.
+        del check_vma  # the old tracer has no vma concept
+        return _exp_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+
+
+if hasattr(lax, "pvary"):
+    pvary = lax.pvary
+else:  # jax <= 0.4.x: no varying-axes tracking, nothing to mark
+    def pvary(x, axes):  # noqa: ARG001 - signature parity with lax.pvary
+        return x
+
+
+__all__ = ["shard_map", "pvary"]

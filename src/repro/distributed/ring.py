@@ -30,6 +30,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bandwidth import gaussian_norm_const
 from repro.core.kde import PAD_VALUE, sqdist
+from repro.distributed import compat
+
+
+def default_mesh(data_axis: str = "data") -> Mesh:
+    """One-axis ring over every local device (1 device → a trivial ring).
+
+    Serving and the estimator's ``ring`` backend use this when no mesh is
+    passed, so the same code path runs unchanged from a CPU laptop to a pod.
+    """
+    import numpy as np
+
+    return Mesh(np.asarray(jax.devices()), (data_axis,))
 
 
 def _ring_perm(size: int):
@@ -38,7 +50,7 @@ def _ring_perm(size: int):
 
 def _pvary(tree, axes: tuple):
     """Mark zero-init carries as varying over the ring axes (shard_map vma)."""
-    return jax.tree.map(lambda a: lax.pvary(a, axes), tree)
+    return jax.tree.map(lambda a: compat.pvary(a, axes), tree)
 
 
 def _ring_scan(
@@ -103,7 +115,7 @@ def ring_score_stats(
     x: jnp.ndarray,
     h,
     *,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     data_axis: str = "data",
     pod_axis: str | None = None,
 ):
@@ -112,6 +124,7 @@ def ring_score_stats(
     ``x`` must be evenly shardable over the ring axes (pad with
     ``repro.core.kde.pad_rows`` first — sentinel rows contribute exactly 0).
     """
+    mesh = default_mesh(data_axis) if mesh is None else mesh
     axes = _row_axes(mesh, data_axis, pod_axis)
     spec = P(axes, None)
 
@@ -128,7 +141,7 @@ def ring_score_stats(
         )
         return _ring_scan(x_rows, init, consume, mesh, data_axis, pod_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, in_specs=(spec,), out_specs=(P(axes), spec)
     )(x)
 
@@ -138,12 +151,13 @@ def ring_sdkde_shift(
     h,
     *,
     score_h=None,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     data_axis: str = "data",
     pod_axis: str | None = None,
     eps: float = 1e-30,
 ) -> jnp.ndarray:
     """Debiased samples, rows staying sharded over the ring axes."""
+    mesh = default_mesh(data_axis) if mesh is None else mesh
     sh = h if score_h is None else score_h
     s0, s1 = ring_score_stats(
         x, sh, mesh=mesh, data_axis=data_axis, pod_axis=pod_axis
@@ -164,10 +178,11 @@ def _ring_eval(
     weight_fn,
     *,
     n_true: int,
-    mesh: Mesh,
+    mesh: Mesh | None,
     data_axis: str,
     pod_axis: str | None,
 ):
+    mesh = default_mesh(data_axis) if mesh is None else mesh
     axes = _row_axes(mesh, data_axis, pod_axis)
     spec = P(axes, None)
     d = x.shape[-1]
@@ -180,7 +195,7 @@ def _ring_eval(
         init = jnp.zeros(y_rows.shape[0], jnp.float32)
         return _ring_scan(x_cols, init, consume, mesh, data_axis, pod_axis)
 
-    sums = jax.shard_map(
+    sums = compat.shard_map(
         local, mesh=mesh, in_specs=(spec, spec), out_specs=P(axes)
     )(y, x)
     h = jnp.asarray(h, jnp.float32)
@@ -193,7 +208,7 @@ def ring_kde(
     h,
     *,
     n_true: int | None = None,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     data_axis: str = "data",
     pod_axis: str | None = None,
 ) -> jnp.ndarray:
@@ -211,7 +226,7 @@ def ring_laplace_kde(
     h,
     *,
     n_true: int | None = None,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     data_axis: str = "data",
     pod_axis: str | None = None,
 ) -> jnp.ndarray:
@@ -235,7 +250,7 @@ def ring_sdkde(
     *,
     score_h=None,
     n_true: int | None = None,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     data_axis: str = "data",
     pod_axis: str | None = None,
 ) -> jnp.ndarray:

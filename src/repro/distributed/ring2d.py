@@ -41,6 +41,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bandwidth import gaussian_norm_const
 from repro.core.kde import PAD_VALUE, sqdist
+from repro.distributed import compat
 
 
 def _phi(sq, h):
@@ -95,7 +96,7 @@ def ring2d_score_stats(
         s0, s1 = _chunked_consume(rows, cols, chunk, body, init)
         return lax.psum(s0, col_axes), lax.psum(s1, col_axes)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P("model", None), P(col_axes, None)),
@@ -129,7 +130,7 @@ def ring2d_kde_sums(
         acc = _chunked_consume(rows, cols, chunk, body, init)
         return lax.psum(acc, col_axes)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P("model", None), P(col_axes, None)),

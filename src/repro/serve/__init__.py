@@ -1,0 +1,28 @@
+"""Query-serving subsystem for KDE / SD-KDE / Laplace-KDE estimators.
+
+Turns the reproduction's batch estimators into an online service: fit (and
+debias) once per dataset via the ``EstimatorRegistry``, then answer ragged
+query traffic through the ``ServeEngine``'s shape-bucketed micro-batcher on
+any of the three execution backends (``jnp`` / ``pallas`` / ``ring``).
+
+    from repro.serve import ServeConfig, ServeEngine
+
+    eng = ServeEngine(ServeConfig(backend="pallas", method="sdkde"))
+    eng.register("my-dataset", x_train)          # O(n²·d) debias, once
+    dens = eng.query("my-dataset", y_queries)    # cheap GEMM per batch
+    print(eng.latency.summary())
+"""
+
+from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
+from repro.serve.config import Backend, Method, ServeConfig
+from repro.serve.engine import ServeEngine
+from repro.serve.registry import EstimatorRegistry, PreparedEstimator
+from repro.serve.stats import LatencyRecorder, LatencySummary
+
+__all__ = [
+    "Backend", "Method", "ServeConfig",
+    "EstimatorRegistry", "PreparedEstimator",
+    "ServeEngine",
+    "ShapeBucketCache", "coalesce", "pad_queries", "split",
+    "LatencyRecorder", "LatencySummary",
+]

@@ -1,0 +1,113 @@
+"""Micro-batching: coalesce ragged query traffic into jit-stable shapes.
+
+Online KDE traffic is ragged — one request asks for 3 densities, the next
+for 700.  Under jit, every distinct batch shape is a fresh compile, so naive
+serving turns ragged traffic into a recompilation storm.  This module fixes
+that with two pieces:
+
+  * **shape buckets** — pad each batch up to a geometric ladder of sizes
+    (multiples of the Pallas ``block_m`` tile / ring size), bounding the
+    number of compiled programs per estimator;
+  * **an LRU of bucket executables** — the engine's per-(estimator, bucket)
+    callables, evicted least-recently-used so a long-lived server with many
+    registered datasets keeps a bounded compile cache.
+
+Padding uses the same far-away sentinel as the kernels (``PAD_VALUE``):
+padded query rows see kernel weight exactly 0.0 from every real train point,
+so their densities are garbage-but-harmless and are sliced off before the
+response is split back per request.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Hashable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.kde import PAD_VALUE, pad_rows  # noqa: F401 - PAD_VALUE is
+# re-exported for serve users building their own padded batches.
+
+
+def pad_queries(y: jnp.ndarray, bucket: int) -> jnp.ndarray:
+    """Pad a (m, d) query batch up to ``bucket`` rows with sentinel points."""
+    if y.shape[0] > bucket:
+        raise ValueError(
+            f"batch of {y.shape[0]} rows does not fit bucket {bucket}"
+        )
+    return pad_rows(y, bucket)
+
+
+def coalesce(
+    batches: Sequence[jnp.ndarray],
+) -> Tuple[jnp.ndarray, List[int]]:
+    """Concatenate per-request query batches into one dispatch.
+
+    Returns the fused (Σm_i, d) array and the per-request row counts used by
+    ``split`` to shard the fused result back out.
+    """
+    if not batches:
+        raise ValueError("no query batches to coalesce")
+    arrs = [jnp.atleast_2d(jnp.asarray(b, jnp.float32)) for b in batches]
+    d = arrs[0].shape[-1]
+    for a in arrs:
+        if a.shape[-1] != d:
+            raise ValueError(f"dimension mismatch: {a.shape[-1]} != {d}")
+    sizes = [a.shape[0] for a in arrs]
+    return jnp.concatenate(arrs, axis=0), sizes
+
+
+def split(fused: jnp.ndarray, sizes: Sequence[int]) -> List[jnp.ndarray]:
+    """Inverse of ``coalesce`` for the fused density vector."""
+    out, off = [], 0
+    for s in sizes:
+        out.append(fused[off:off + s])
+        off += s
+    return out
+
+
+class ShapeBucketCache:
+    """LRU cache of compiled per-(estimator, bucket) executables.
+
+    Keys are arbitrary hashables (the engine uses ``(estimator_key,
+    bucket_rows)``).  ``hits`` / ``misses`` / ``evictions`` are exposed so
+    tests and the throughput benchmark can assert cache behavior on ragged
+    traffic.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Callable]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Callable]):
+        """Return the cached executable for ``key``, building on miss."""
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        fn = build()
+        self._entries[key] = fn
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return fn
+
+    def invalidate(self, predicate: Callable[[Hashable], bool]) -> None:
+        """Drop entries whose key matches (e.g. after an estimator refit)."""
+        for k in [k for k in self._entries if predicate(k)]:
+            del self._entries[k]
+
+
+__all__ = ["pad_queries", "coalesce", "split", "ShapeBucketCache"]

@@ -1,0 +1,89 @@
+"""Serving configuration: backend, estimator method, batching policy.
+
+One frozen config object controls the whole request path — which density
+method is served, which execution backend evaluates it, and how ragged query
+traffic is coalesced into jit-stable shape buckets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Tuple
+
+Backend = Literal["jnp", "pallas", "ring"]
+Method = Literal["kde", "sdkde", "laplace"]
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static serving configuration (hashable; safe to close over in jit).
+
+    Batching: a query batch of ``m`` rows is padded up to the smallest shape
+    bucket ≥ m.  Buckets double geometrically from ``min_batch`` to
+    ``max_batch`` and are rounded up to tile/ring multiples, so arbitrary
+    ragged traffic hits at most ``log2(max/min)+1`` distinct compiled shapes
+    per estimator instead of one compile per distinct batch size.
+    """
+
+    backend: Backend = "jnp"
+    method: Method = "sdkde"
+
+    # estimator knobs (mirrors repro.core.estimator.EstimatorConfig)
+    block: int = 1024            # jnp streaming column-block size
+    block_m: int = 128           # Pallas row tile
+    block_n: int = 512           # Pallas column tile
+    interpret: bool = True       # Pallas interpret mode (CPU validation)
+    score_h: Optional[float] = None
+
+    # micro-batching policy
+    min_batch: int = 128         # smallest shape bucket
+    max_batch: int = 4096        # largest shape bucket (larger batches chunk)
+    cache_buckets: int = 8       # LRU capacity of jitted shape buckets
+
+    def __post_init__(self):
+        if self.min_batch <= 0 or self.max_batch < self.min_batch:
+            raise ValueError(
+                f"bad bucket range [{self.min_batch}, {self.max_batch}]"
+            )
+        if self.cache_buckets < 1:
+            raise ValueError("cache_buckets must be >= 1")
+
+    def row_multiple(self, ring_size: int = 1) -> int:
+        """Row-count multiple every dispatched batch must honor.
+
+        Pallas tiles rows by ``block_m``; the ring shards rows over
+        ``ring_size`` devices; the jnp path is shape-agnostic but still
+        bucketed for jit-cache stability.
+        """
+        if self.backend == "pallas":
+            return self.block_m
+        if self.backend == "ring":
+            return max(1, ring_size)
+        return 1
+
+    def bucket_sizes(self, ring_size: int = 1) -> Tuple[int, ...]:
+        """The geometric ladder of padded batch shapes this config serves."""
+        mult = self.row_multiple(ring_size)
+        sizes, b = [], self.min_batch
+        while True:
+            sizes.append(_round_up(min(b, self.max_batch), mult))
+            if b >= self.max_batch:
+                break
+            b *= 2
+        return tuple(dict.fromkeys(sizes))
+
+    def bucket_for(self, m: int, ring_size: int = 1) -> int:
+        """Smallest shape bucket that fits an ``m``-row query batch."""
+        if m <= 0:
+            raise ValueError(f"empty query batch (m={m})")
+        for b in self.bucket_sizes(ring_size):
+            if m <= b:
+                return b
+        return self.bucket_sizes(ring_size)[-1]  # chunked by the engine
+
+
+__all__ = ["Backend", "Method", "ServeConfig"]

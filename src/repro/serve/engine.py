@@ -1,0 +1,153 @@
+"""The serving engine: registry + micro-batcher + backend dispatch.
+
+Request lifecycle (see docs/architecture.md):
+
+  register(key, x)      — one-time: debias (sdkde), precompute layouts, cache
+  query(key, y)         — pad y to a shape bucket, run the bucket executable,
+                          slice, record latency
+  query_many(key, [y…]) — coalesce several ragged requests into ONE padded
+                          dispatch, then split the fused densities back out
+
+All three backends dispatch through the same bucket executables, built
+lazily per (estimator, bucket) and kept in a small LRU:
+
+  * ``jnp``    — streaming-GEMM reference (repro.core.kde), any hardware
+  * ``pallas`` — prepared fast path (repro.kernels.ops.flash_kde_prepared):
+                 train tensors transposed/normed once at fit, queries arrive
+                 pre-padded so the per-call wrapper work disappears
+  * ``ring``   — mesh-sharded evaluation (repro.distributed.ring) against
+                 the fit-time sharded train placement
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
+from repro.serve.config import ServeConfig
+from repro.serve.registry import EstimatorRegistry, PreparedEstimator
+from repro.serve.stats import LatencyRecorder
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        config: ServeConfig | None = None,
+        registry: EstimatorRegistry | None = None,
+    ):
+        if config is None:
+            config = registry.config if registry is not None else ServeConfig()
+        self.config = config
+        self.registry = registry or EstimatorRegistry(config)
+        self.cache = ShapeBucketCache(config.cache_buckets)
+        self.latency = LatencyRecorder()
+
+    # -- fit path --------------------------------------------------------
+
+    def register(
+        self,
+        key: str,
+        x: jnp.ndarray,
+        h: Optional[float] = None,
+        config: ServeConfig | None = None,
+        refit: bool = False,
+    ) -> PreparedEstimator:
+        prep = self.registry.fit(key, x, h, config=config, refit=refit)
+        if refit:
+            self.cache.invalidate(lambda k: k[0] == key)
+        return prep
+
+    # -- query path ------------------------------------------------------
+
+    def query(self, key: str, y: jnp.ndarray) -> jnp.ndarray:
+        """Densities for one request; pads to a bucket, times the dispatch."""
+        prep = self.registry.get(key)
+        y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
+        t0 = time.perf_counter()
+        dens = jax.block_until_ready(self._dispatch(prep, y))
+        self.latency.record(time.perf_counter() - t0, y.shape[0], 1)
+        return dens
+
+    def query_many(
+        self, key: str, batches: Sequence[jnp.ndarray]
+    ) -> List[jnp.ndarray]:
+        """Coalesce several ragged requests into one padded dispatch."""
+        prep = self.registry.get(key)
+        fused, sizes = coalesce(batches)
+        t0 = time.perf_counter()
+        dens = jax.block_until_ready(self._dispatch(prep, fused))
+        self.latency.record(
+            time.perf_counter() - t0, fused.shape[0], len(sizes)
+        )
+        return split(dens, sizes)
+
+    # -- internals -------------------------------------------------------
+
+    def _dispatch(self, prep: PreparedEstimator, y: jnp.ndarray) -> jnp.ndarray:
+        cfg = prep.config
+        top = cfg.bucket_sizes(prep.ring_size)[-1]
+        m = y.shape[0]
+        if m <= top:
+            return self._run_bucket(prep, y)
+        # oversize batch: chunk at the largest bucket (each chunk jit-stable)
+        parts = [
+            self._run_bucket(prep, y[off:off + top])
+            for off in range(0, m, top)
+        ]
+        return jnp.concatenate(parts)
+
+    def _run_bucket(self, prep: PreparedEstimator, y: jnp.ndarray):
+        cfg = prep.config
+        bucket = cfg.bucket_for(y.shape[0], prep.ring_size)
+        # Keyed on the fit generation: a refit (or evict + re-register)
+        # produces a new generation, so stale executables can never serve it.
+        fn = self.cache.get_or_build(
+            (prep.key, prep.generation, bucket),
+            lambda: self._build_executable(prep),
+        )
+        return fn(pad_queries(y, bucket))[: y.shape[0]]
+
+    def _build_executable(self, prep: PreparedEstimator):
+        """Bucket executable: padded (bucket, d) queries → (bucket,) dens.
+
+        Each executable owns its jit wrapper (train tensors passed as
+        arguments, not baked as constants), so evicting an entry from the
+        LRU releases its compiled program — the cache bounds compilations,
+        not just Python closures.
+        """
+        cfg = prep.config
+        laplace = cfg.method == "laplace"
+
+        if cfg.backend == "pallas":
+            from repro.kernels import ops
+
+            jfn = jax.jit(lambda yp, xt, nrm_x: ops.flash_kde_prepared(
+                yp, xt, nrm_x, prep.h,
+                block_m=cfg.block_m, block_n=cfg.block_n,
+                interpret=cfg.interpret, laplace=laplace,
+            ) / prep.norm)
+            return lambda yp: jfn(yp, prep.xt, prep.nrm_x)
+
+        if cfg.backend == "ring":
+            from repro.distributed import ring
+
+            eval_fn = ring.ring_laplace_kde if laplace else ring.ring_kde
+            jfn = jax.jit(lambda yp, xs: eval_fn(
+                xs, yp, prep.h, n_true=prep.n_true, mesh=prep.mesh,
+            ))
+            return lambda yp: jfn(yp, prep.x_sharded)
+
+        from repro.core import kde as ref
+
+        eval_fn = ref.laplace_kde_eval if laplace else ref.kde_eval
+        jfn = jax.jit(
+            lambda yp, pts: eval_fn(pts, yp, prep.h, block=cfg.block)
+        )
+        return lambda yp: jfn(yp, prep.points)
+
+
+__all__ = ["ServeEngine"]

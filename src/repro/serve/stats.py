@@ -1,0 +1,64 @@
+"""Serving telemetry: per-request latency percentiles and throughput."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class LatencySummary:
+    count: int
+    queries: int
+    qps: float
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class LatencyRecorder:
+    """Accumulates (seconds, n_queries) samples; summarizes on demand.
+
+    A coalesced dispatch records one sample per *request* it served (each
+    request in the fused batch observed the full dispatch latency — that is
+    what the client sees).
+    """
+
+    def __init__(self):
+        self._lat_s: List[float] = []
+        self._queries = 0
+        self._busy_s = 0.0
+
+    def record(self, seconds: float, n_queries: int, n_requests: int = 1):
+        self._lat_s.extend([seconds] * n_requests)
+        self._queries += n_queries
+        self._busy_s += seconds
+
+    def reset(self) -> None:
+        self._lat_s.clear()
+        self._queries = 0
+        self._busy_s = 0.0
+
+    def _percentile(self, q: float) -> float:
+        xs = sorted(self._lat_s)
+        if not xs:
+            return float("nan")
+        idx = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
+        return xs[idx]
+
+    def summary(self) -> LatencySummary:
+        n = len(self._lat_s)
+        return LatencySummary(
+            count=n,
+            queries=self._queries,
+            qps=self._queries / self._busy_s if self._busy_s > 0 else 0.0,
+            p50_ms=1e3 * self._percentile(0.50),
+            p99_ms=1e3 * self._percentile(0.99),
+            mean_ms=1e3 * (sum(self._lat_s) / n) if n else float("nan"),
+        )
+
+
+__all__ = ["LatencyRecorder", "LatencySummary"]

@@ -14,22 +14,31 @@ import pytest
 
 _CHILD = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import kde as ref
 from repro.distributed import ring
 from repro.distributed.ring2d import ring2d_sdkde, ring2d_kde_sums
+
+def make_mesh(shape, axes):
+    try:  # jax >= 0.5: explicit axis types
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        import numpy as np
+        from jax.sharding import Mesh
+        n = int(np.prod(shape))
+        return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 x = jax.random.normal(jax.random.PRNGKey(0), (256, 8))
 y = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
 h = 0.6
 p_ref = np.asarray(ref.sdkde_eval(x, y, h, block=64))
 
-mesh2 = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+mesh2 = make_mesh((4, 2), ('data', 'model'))
 p = np.asarray(ring.ring_sdkde(x, y, h, mesh=mesh2))
 np.testing.assert_allclose(p, p_ref, rtol=2e-4)
 
-mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                      axis_types=(AxisType.Auto,)*3)
+mesh3 = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 p = np.asarray(ring.ring_sdkde(x, y, h, mesh=mesh3, pod_axis='pod'))
 np.testing.assert_allclose(p, p_ref, rtol=2e-4)
 

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5; older releases have no explicit-sharding axis types
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:
+    AxisType = None
 
 from repro.models import parallel
 

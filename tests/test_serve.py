@@ -1,0 +1,191 @@
+"""repro.serve: registry amortization, ragged-batch padding, bucket cache.
+
+Small sizes + tiny Pallas tiles (interpret mode) keep this fast on CPU; the
+full 4k/8-d acceptance check lives in benchmarks/serve_throughput.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kde as ref
+from repro.serve import (
+    EstimatorRegistry,
+    ServeConfig,
+    ServeEngine,
+    ShapeBucketCache,
+    coalesce,
+    pad_queries,
+    split,
+)
+
+N, D, H = 384, 8, 0.6
+
+
+@pytest.fixture(scope="module")
+def data():
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    return (jax.random.normal(kx, (N, D)),
+            jax.random.normal(ky, (300, D)))
+
+
+def _cfg(backend="jnp", method="sdkde", **kw):
+    base = dict(backend=backend, method=method, interpret=True,
+                block_m=8, block_n=128, block=128,
+                min_batch=16, max_batch=128)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Registry: the quadratic debias pass runs once per dataset.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_debias_runs_once_per_key(data):
+    x, _ = data
+    reg = EstimatorRegistry(_cfg())
+    p1 = reg.fit("a", x, h=H)
+    p2 = reg.fit("a", x, h=H)          # cache hit: no second score pass
+    assert p1 is p2
+    assert reg.n_fits == 1
+    reg.fit("b", x[:128], h=H)         # different dataset: fits again
+    assert reg.n_fits == 2
+    p3 = reg.fit("a", x, h=H, refit=True)
+    assert reg.n_fits == 3 and p3 is not p1
+
+
+def test_registry_prepared_state_matches_reference_shift(data):
+    x, _ = data
+    prep = EstimatorRegistry(_cfg(backend="jnp")).fit("a", x, h=H)
+    np.testing.assert_allclose(
+        np.asarray(prep.points),
+        np.asarray(ref.sdkde_shift(x, H, block=128)),
+        rtol=1e-6,
+    )
+    # pallas prep carries the transposed layout + column norms
+    prep_p = EstimatorRegistry(_cfg(backend="pallas")).fit("a", x, h=H)
+    assert prep_p.xt is not None and prep_p.xt.shape[0] == D
+    assert prep_p.xt.shape[1] % 128 == 0          # padded to block_n
+    assert prep_p.nrm_x.shape == (1, prep_p.xt.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Ragged batches: padding never changes densities (vs jnp reference).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "ring"])
+@pytest.mark.parametrize("method", ["kde", "sdkde", "laplace"])
+def test_ragged_batches_match_reference(data, backend, method):
+    x, y = data
+    eng = ServeEngine(_cfg(backend=backend, method=method))
+    eng.register("ds", x, h=H)
+    ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
+              "laplace": ref.laplace_kde_eval}[method]
+    want = np.asarray(ref_fn(x, y, H, block=128))
+    for m in (1, 7, 16, 33, 128):      # spans buckets incl. exact fits
+        got = np.asarray(eng.query("ds", y[:m]))
+        assert got.shape == (m,)
+        np.testing.assert_allclose(got, want[:m], rtol=1e-5,
+                                   atol=1e-6 * want.max())
+
+
+def test_oversize_batch_chunks_at_largest_bucket(data):
+    x, y = data
+    eng = ServeEngine(_cfg())          # max bucket 128 < 300 queries
+    eng.register("ds", x, h=H)
+    got = np.asarray(eng.query("ds", y))
+    want = np.asarray(ref.sdkde_eval(x, y, H, block=128))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * want.max())
+
+
+def test_query_many_coalesces_to_one_dispatch(data):
+    x, y = data
+    eng = ServeEngine(_cfg(backend="pallas", method="kde"))
+    eng.register("ds", x, h=H)
+    outs = eng.query_many("ds", [y[:3], y[3:50], y[50:61]])
+    assert [o.shape[0] for o in outs] == [3, 47, 11]
+    want = np.asarray(ref.kde_eval(x, y[:61], H, block=128))
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs)), want,
+                               rtol=1e-5, atol=1e-6 * want.max())
+    assert eng.latency.summary().count == 3     # 3 requests, 1 dispatch
+
+
+def test_pad_queries_roundtrip(data):
+    _, y = data
+    yp = pad_queries(y[:5], 16)
+    assert yp.shape == (16, D)
+    fused, sizes = coalesce([y[:2], y[2:9]])
+    parts = split(fused, sizes)
+    assert [p.shape[0] for p in parts] == [2, 7]
+    with pytest.raises(ValueError):
+        pad_queries(y[:20], 16)
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets: bounded compiled shapes, LRU behavior.
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_respects_tile_multiples():
+    cfg = _cfg(backend="pallas", block_m=8, min_batch=10, max_batch=100)
+    sizes = cfg.bucket_sizes()
+    assert all(b % 8 == 0 for b in sizes)
+    assert sizes == tuple(sorted(set(sizes)))
+    assert cfg.bucket_for(1) == sizes[0]
+    assert cfg.bucket_for(sizes[-1]) == sizes[-1]
+
+
+def test_shape_bucket_cache_hits_and_eviction(data):
+    x, y = data
+    eng = ServeEngine(_cfg(cache_buckets=2))
+    eng.register("ds", x, h=H)
+    eng.query("ds", y[:5])             # bucket 16: miss (compile)
+    eng.query("ds", y[:9])             # bucket 16: hit
+    eng.query("ds", y[:20])            # bucket 32: miss
+    assert (eng.cache.hits, eng.cache.misses) == (1, 2)
+    eng.query("ds", y[:40])            # bucket 64: miss -> evicts LRU (16)
+    assert eng.cache.evictions == 1 and len(eng.cache) == 2
+    eng.query("ds", y[:9])             # bucket 16 again: rebuilt (miss)
+    assert eng.cache.misses == 4
+
+
+def test_refit_invalidates_bucket_executables(data):
+    x, y = data
+    eng = ServeEngine(_cfg())
+    eng.register("ds", x, h=H)
+    stale = np.asarray(eng.query("ds", y[:8]))
+    eng.register("ds", 2.0 + x, h=H, refit=True)   # dataset moved
+    fresh = np.asarray(eng.query("ds", y[:8]))
+    want = np.asarray(ref.sdkde_eval(2.0 + x, y[:8], H, block=128))
+    np.testing.assert_allclose(fresh, want, rtol=1e-5,
+                               atol=1e-6 * want.max())
+    assert not np.allclose(fresh, stale)
+
+
+def test_evict_and_reregister_never_serves_stale_executables(data):
+    """Cache keys include the fit generation, so replacing a dataset by ANY
+    path (here: evict + re-register, bypassing refit=True) gets fresh
+    executables instead of closures over the old prepared estimator."""
+    x, y = data
+    eng = ServeEngine(_cfg())
+    eng.register("ds", x, h=H)
+    stale = np.asarray(eng.query("ds", y[:8]))
+    eng.registry.evict("ds")
+    eng.register("ds", 2.0 + x, h=H)       # no refit flag, no invalidate
+    fresh = np.asarray(eng.query("ds", y[:8]))
+    want = np.asarray(ref.sdkde_eval(2.0 + x, y[:8], H, block=128))
+    np.testing.assert_allclose(fresh, want, rtol=1e-5,
+                               atol=1e-6 * want.max())
+    assert not np.allclose(fresh, stale)
+
+
+def test_lru_cache_unit():
+    c = ShapeBucketCache(capacity=2)
+    built = []
+    for k in ("a", "b", "a", "c", "b"):
+        c.get_or_build(k, lambda k=k: built.append(k) or (lambda: k))
+    assert built == ["a", "b", "c", "b"]   # 'b' evicted by 'c', rebuilt
+    assert c.hits == 1 and c.misses == 4 and c.evictions == 2
