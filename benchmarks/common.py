@@ -1,16 +1,24 @@
-"""Shared benchmark utilities: timing, CSV output, CPU-scaled sizes.
+"""Shared benchmark utilities: timing, CSV + JSON output, CPU-scaled sizes.
 
 The paper's GPU sizes (up to 1M points) are CPU-scaled here; every harness
 takes ``--scale`` so the same code reproduces the paper's exact sweep on
 real hardware.  Timings use best-of-k wall clock around block_until_ready.
+
+Every ``emit`` call is also captured into an in-process record list so
+``benchmarks/run.py`` can dump the whole suite as machine-readable JSON
+(``BENCH_flash.json``) — the per-PR perf trajectory artifact.
 """
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+#: Every emit() of the current process, in order — dumped by write_bench_json.
+RECORDS: List[Dict] = []
 
 
 def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
@@ -25,6 +33,34 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
     return best
 
 
+def _plain(v):
+    """JSON-safe scalar: numpy/jax scalars → python, else str fallback."""
+    if isinstance(v, (int, float, str, bool)) or v is None:
+        return v
+    try:
+        return v.item()
+    except AttributeError:
+        return str(v)
+
+
 def emit(name: str, **fields):
+    RECORDS.append({"cell": name, **{k: _plain(v) for k, v in fields.items()}})
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{name},{kv}")
+
+
+def write_bench_json(path: str, **meta) -> None:
+    """Dump every emitted cell (plus run metadata) as one JSON artifact."""
+    doc = {
+        "meta": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            **{k: _plain(v) for k, v in meta.items()},
+        },
+        "cells": RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")

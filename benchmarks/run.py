@@ -1,8 +1,11 @@
 """Benchmark aggregator: one harness per paper figure/table.
 
-``python -m benchmarks.run`` runs every harness at CPU-scaled sizes and
-prints ``name,key=value,...`` CSV.  Individual harnesses accept flags for
-the paper's full sizes on real hardware.
+``python -m benchmarks.run`` runs every harness at CPU-scaled sizes,
+prints ``name,key=value,...`` CSV, and dumps the whole suite as
+machine-readable JSON to ``BENCH_flash.json`` (per-cell runtime, config,
+precision tier, tuned launch tiles) so the perf trajectory is tracked
+across PRs.  Individual harnesses accept flags for the paper's full sizes
+on real hardware.
 """
 
 from __future__ import annotations
@@ -10,37 +13,54 @@ from __future__ import annotations
 import time
 
 from benchmarks import (
+    common,
     fig1_runtime,
     fig2_oracle_16d,
     fig3_oracle_1d,
     fig4_fusion,
     fig5_utilization,
+    precision_sweep,
     serve_throughput,
     table1_methods,
 )
+
+BENCH_JSON = "BENCH_flash.json"
+
+
+def _run(name: str, desc: str, fn, *args, **kw) -> None:
+    print(f"# {name}: {desc}")
+    t0 = time.time()
+    fn(*args, **kw)
+    common.emit("harness", harness=name, wall_s=round(time.time() - t0, 2))
 
 
 def main() -> None:
     t0 = time.time()
     print("# Flash-SD-KDE benchmark suite (CPU-scaled; see EXPERIMENTS.md)")
-    print("# fig1: 16-D runtime, naive vs GEMM vs flash (paper Fig. 1)")
-    fig1_runtime.main(ns=(1024, 2048, 4096))
-    print("# fig2: 16-D oracle MISE/MIAE (paper Fig. 2)")
-    fig2_oracle_16d.main(ns=(512, 1024, 2048), seeds=(0, 1), n_mc=2048)
-    print("# fig3: 1-D oracle MISE/MIAE (paper Fig. 3)")
-    fig3_oracle_1d.main(ns=(512, 1024, 2048, 4096), seeds=(0, 1))
-    print("# fig4: Laplace fusion speedup (paper Fig. 4)")
-    fig4_fusion.main(ns=(4096, 8192, 16384))
-    print("# fig5: utilization / roofline terms (paper Fig. 5/7)")
-    fig5_utilization.main(ns=(1024, 2048, 4096))
-    print("# table1: method comparison at fixed size (paper Table 1)")
-    table1_methods.main(n=8192)
-    print("# serve: query-serving qps / tail latency (repro.serve)")
-    serve_throughput.main(
-        n=1024, d=8, backends=("jnp", "pallas"),
-        batch_sizes=(8, 32), n_requests=8,
-    )
-    print(f"# total {time.time() - t0:.1f}s")
+    _run("fig1", "16-D runtime, naive vs GEMM vs flash (paper Fig. 1)",
+         fig1_runtime.main, ns=(1024, 2048, 4096))
+    _run("fig2", "16-D oracle MISE/MIAE (paper Fig. 2)",
+         fig2_oracle_16d.main, ns=(512, 1024, 2048), seeds=(0, 1),
+         n_mc=2048)
+    _run("fig3", "1-D oracle MISE/MIAE (paper Fig. 3)",
+         fig3_oracle_1d.main, ns=(512, 1024, 2048, 4096), seeds=(0, 1))
+    _run("fig4", "Laplace fusion speedup (paper Fig. 4)",
+         fig4_fusion.main, ns=(4096, 8192, 16384))
+    _run("fig5", "utilization / roofline terms (paper Fig. 5/7)",
+         fig5_utilization.main, ns=(1024, 2048, 4096))
+    _run("table1", "method comparison at fixed size (paper Table 1)",
+         table1_methods.main, n=8192)
+    _run("precision", "f32/bf16/bf16x2 accuracy-vs-runtime + autotuner "
+         "acceptance cell (kernels/precision.py, kernels/autotune.py)",
+         precision_sweep.main, ns=(1024,))
+    _run("serve", "query-serving qps / tail latency (repro.serve)",
+         serve_throughput.main,
+         n=1024, d=8, backends=("jnp", "pallas"),
+         batch_sizes=(8, 32), n_requests=8)
+    total = time.time() - t0
+    common.write_bench_json(BENCH_JSON, suite="cpu-scaled",
+                            total_s=round(total, 1))
+    print(f"# total {total:.1f}s  → {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ def main(
     seed: int = 0,
     verify: bool = True,
     rtol: float = 1e-5,
+    precision: str = "f32",
 ) -> None:
     mix = mixture_for_dim(d)
     key = jax.random.PRNGKey(seed)
@@ -46,12 +47,15 @@ def main(
             backend=backend, method=method, interpret=True,
             block_m=min(128, max(8, min(batch_sizes))),
             block_n=min(512, n),
+            precision=precision,
             min_batch=min(batch_sizes), max_batch=max(batch_sizes),
         )
         eng = ServeEngine(cfg)
         t0 = time.perf_counter()
-        eng.register("bench", x, h=h)
+        prep = eng.register("bench", x, h=h)
         emit("serve_fit", backend=backend, method=method, n=n, d=d,
+             precision=precision,
+             block_m=prep.block_m, block_n=prep.block_n,
              ms=f"{1e3 * (time.perf_counter() - t0):.1f}")
 
         if verify:
@@ -61,12 +65,18 @@ def main(
                       "laplace": ref.laplace_kde_eval}[method]
             want = np.asarray(ref_fn(x, yv, h, block=1024))
             # atol floor: deep-tail densities (≥1e6× below peak) accumulate
-            # f32 ordering noise through the flash debias pass.
+            # f32 ordering noise through the flash debias pass.  Reduced
+            # precision tiers get their documented tolerance floors
+            # (rtol + peak-relative atol, as in tests/test_precision_autotune).
+            tier_rtol = max(rtol, {"f32": 0.0, "bf16": 5e-2,
+                                   "bf16x2": 5e-4}[precision])
+            atol_frac = {"f32": 1e-6, "bf16": 5e-3,
+                         "bf16x2": 1e-5}[precision]
             np.testing.assert_allclose(
-                got, want, rtol=rtol, atol=1e-6 * float(want.max())
+                got, want, rtol=tier_rtol, atol=atol_frac * float(want.max())
             )
             emit("serve_verify", backend=backend, n=n, d=d,
-                 rtol=rtol, status="ok")
+                 precision=precision, rtol=tier_rtol, status="ok")
 
         rng = np.random.default_rng(seed)
         for b in batch_sizes:
@@ -78,6 +88,7 @@ def main(
                 eng.query("bench", y_all[off:off + b])
             s = eng.latency.summary()
             emit("serve", backend=backend, method=method, n=n, d=d, batch=b,
+                 precision=precision,
                  qps=f"{s.qps:.1f}", p50_ms=f"{s.p50_ms:.2f}",
                  p99_ms=f"{s.p99_ms:.2f}")
         emit("serve_cache", backend=backend, hits=eng.cache.hits,
@@ -96,7 +107,10 @@ if __name__ == "__main__":
                     choices=["kde", "sdkde", "laplace"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "bf16x2"])
     args = ap.parse_args()
     main(n=args.n, d=args.d, backends=tuple(args.backends),
          batch_sizes=tuple(args.batch_sizes), n_requests=args.requests,
-         method=args.method, seed=args.seed, verify=not args.no_verify)
+         method=args.method, seed=args.seed, verify=not args.no_verify,
+         precision=args.precision)

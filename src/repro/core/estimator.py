@@ -29,11 +29,12 @@ Backend = Literal["jnp", "pallas", "ring"]
 class EstimatorConfig:
     backend: Backend = "jnp"
     block: int = 1024            # streaming column-block size (jnp backend)
-    block_m: int = 128           # Pallas row tile
-    block_n: int = 512           # Pallas column tile
+    block_m: "int | str" = 128   # Pallas row tile (int or "auto" = autotuned)
+    block_n: "int | str" = 512   # Pallas column tile (int or "auto")
     interpret: bool = True       # Pallas interpret mode (CPU validation)
     score_h: Optional[float] = None  # score-estimation bandwidth (None = h)
     dtype: jnp.dtype = jnp.float32
+    precision: str = "f32"       # Pallas GEMM-operand tier (kernels/precision)
 
 
 class KDE:
@@ -62,7 +63,7 @@ class KDE:
             from repro.kernels import ops
 
             return ops.flash_kde(
-                x, y, self.h,
+                x, y, self.h, precision=cfg.precision,
                 block_m=cfg.block_m, block_n=cfg.block_n,
                 interpret=cfg.interpret,
             )
@@ -96,6 +97,7 @@ class SDKDE(KDE):
 
             self.x_sd = ops.flash_sdkde_shift(
                 self.x_train, self.h, score_h=cfg.score_h,
+                precision=cfg.precision,
                 block_m=cfg.block_m, block_n=cfg.block_n,
                 interpret=cfg.interpret,
             )
@@ -133,12 +135,12 @@ class LaplaceKDE(KDE):
 
             if self.fused:
                 return ops.flash_laplace_kde(
-                    x, y, self.h,
+                    x, y, self.h, precision=cfg.precision,
                     block_m=cfg.block_m, block_n=cfg.block_n,
                     interpret=cfg.interpret,
                 )
             return ops.laplace_kde_nonfused(
-                x, y, self.h,
+                x, y, self.h, precision=cfg.precision,
                 block_m=cfg.block_m, block_n=cfg.block_n,
                 interpret=cfg.interpret,
             )

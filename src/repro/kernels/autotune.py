@@ -1,0 +1,292 @@
+"""Launch-parameter autotuning: cost-model shortlist → optional device timing.
+
+This is the §6.2 hillclimb wired into the dispatch path.  The seed carried
+the performance model (kernels/tuning.py) but every kernel still launched at
+one hardcoded tile shape; here every public wrapper may say
+``block_m="auto"`` / ``block_n="auto"`` and gets, per (rows, cols, d,
+out_width, precision):
+
+  1. a **model shortlist** — every candidate tile under the (dtype-aware)
+     VMEM budget, costed on the *padded* problem (padding a 300-row query
+     batch to a 2048-row tile is real work the plain model can't see) with
+     the MXU derated for the precision tier (f32 runs the systolic array in
+     multiple passes; bf16x2 issues 4 GEMM products per logical GEMM);
+  2. optionally, **device timing of the top-k** shortlisted configs
+     (``measure=True``, or automatically on a real TPU backend) — the model
+     ranks, the hardware votes;
+  3. a **process-level winner cache** keyed by padded shape buckets
+     (next-power-of-two rows/cols), so steady-state serving and repeated
+     benchmark cells never re-tune.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.kernels import precision as prec
+from repro.kernels import tuning
+
+# Candidate tiles.  block_n is the lane-major streamed axis (multiples of
+# 128 lanes); block_m is the sublane axis (multiples of 8).  Small sizes are
+# included so tiny problems (tests, CPU-scaled cells) don't get padded into
+# oblivion — the padded-shape cost makes the model reject oversized tiles
+# for them automatically.
+DEFAULT_BLOCK_MS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+DEFAULT_BLOCK_NS = (128, 256, 512, 1024, 2048, 4096)
+
+# MXU throughput derate per tier.  The MXU natively multiplies bf16
+# operands (f32 accumulate); XLA lowers an exact f32×f32 GEMM to a 6-pass
+# bf16 expansion (the BF16_6X algorithm), so the f32 tier runs at ~1/6 of
+# bf16 peak.  bf16 and bf16x2 run at full rate — bf16x2 instead issues 4
+# products per logical GEMM (the compensated hi–lo expansion), which
+# ``precision.gram_products`` accounts for, landing it between XLA's
+# BF16_3X and BF16_6X in both cost and accuracy.
+MXU_DERATE = {"f32": 1.0 / 6.0, "bf16": 1.0, "bf16x2": 1.0}
+
+# Per-grid-step launch cost: Pallas grid-loop bookkeeping + DMA issue for
+# the next column tile.  The roofline terms in tuning.py are totals over
+# the pass and assume perfect pipelining; this is the constant the tile
+# sweep actually trades against VMEM — at d=16 the pass is exp(VPU)-bound,
+# so the *only* modeled difference between launch configs is how many grid
+# steps they spend (fixed 128×512 on the 32k cell: 2048 steps; the tuned
+# 1024-row tiles: a few dozen).
+STEP_OVERHEAD_S = 150e-9
+
+BlockArg = Union[int, str]  # an int or the literal "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One costed launch candidate (modeled on the padded problem)."""
+
+    block_m: int
+    block_n: int
+    step_time: float           # modeled seconds for the full padded pass
+    bound: str                 # which resource the model says saturates
+    precision: str
+    vmem_bytes: int
+
+    @property
+    def blocks(self) -> Tuple[int, int]:
+        return self.block_m, self.block_n
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def modeled_cost(
+    rows: int, cols: int, d: int, *, block_m: int, block_n: int,
+    out_width: int = 1, precision: str = "f32",
+    vmem_itemsize: Optional[int] = None,
+) -> Optional[TunedConfig]:
+    """Precision-derated, padding-aware cost; None if over the VMEM budget.
+
+    ``vmem_itemsize`` overrides the operand byte width used for the VMEM
+    feasibility gate only (cost terms still use the tier's own width).  The
+    serving registry passes 4 so a tile tuned at the bf16 tier stays
+    feasible when a per-request override later serves f32/bf16x2 traffic
+    through the same prepared layout.
+    """
+    prec.validate(precision)
+    pr, pc = _pad_up(rows, block_m), _pad_up(cols, block_n)
+    c = tuning.pair_pass_cost(
+        pr, pc, d, block_m=block_m, block_n=block_n, out_width=out_width,
+        itemsize=prec.operand_bytes(precision),
+    )
+    vmem = c.vmem_bytes
+    if vmem_itemsize is not None:
+        vmem = tuning.pair_pass_cost(
+            pr, pc, d, block_m=block_m, block_n=block_n,
+            out_width=out_width, itemsize=vmem_itemsize,
+        ).vmem_bytes
+    if vmem > tuning.VMEM_BUDGET:
+        return None
+    t_mxu = (c.mxu_flops * prec.gram_products(precision)
+             / (tuning.MXU_FLOPS * MXU_DERATE[precision]))
+    terms = {"hbm": c.t_hbm, "mxu": t_mxu, "vpu": c.t_vpu}
+    grid_steps = (pr // block_m) * (pc // block_n)
+    return TunedConfig(
+        block_m, block_n,
+        max(terms.values()) + grid_steps * STEP_OVERHEAD_S,
+        max(terms, key=terms.get),
+        precision, vmem,
+    )
+
+
+def shortlist(
+    rows: int, cols: int, d: int, *, out_width: int = 1,
+    precision: str = "f32",
+    block_ms: Sequence[int] = DEFAULT_BLOCK_MS,
+    block_ns: Sequence[int] = DEFAULT_BLOCK_NS,
+    vmem_itemsize: Optional[int] = None,
+) -> List[TunedConfig]:
+    """All feasible candidates, best modeled step time first."""
+    cands = []
+    for bm in block_ms:
+        for bn in block_ns:
+            c = modeled_cost(rows, cols, d, block_m=bm, block_n=bn,
+                             out_width=out_width, precision=precision,
+                             vmem_itemsize=vmem_itemsize)
+            if c is not None:
+                cands.append(c)
+    return sorted(cands, key=lambda c: c.step_time)
+
+
+# ---------------------------------------------------------------------------
+# Winner cache + the tuning entry point.
+# ---------------------------------------------------------------------------
+
+_CACHE: Dict[tuple, Tuple[int, int]] = {}
+_LOCK = threading.Lock()
+
+
+def clear_cache() -> None:
+    with _LOCK:
+        _CACHE.clear()
+
+
+def cache_info() -> Dict[tuple, Tuple[int, int]]:
+    with _LOCK:
+        return dict(_CACHE)
+
+
+def _shape_bucket(x: int) -> int:
+    """Next power of two ≥ x: the cache key granularity for rows/cols."""
+    return 1 << max(int(math.ceil(math.log2(max(x, 1)))), 0)
+
+
+def _probe_time_fn(rows: int, cols: int, d: int, out_width: int,
+                   precision: str) -> Callable[[int, int], float]:
+    """Device-timing probe: best-of-3 wall clock of the real kernel shape
+    on synthetic data at the candidate tile — the score kernel (with its
+    second φ@[X|1] GEMM and (block_m, d+1) accumulator) when out_width > 1,
+    the KDE kernel otherwise.  Only built when timing is requested (TPU
+    present / measure=True) — never in interpret mode."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (cols, d), jnp.float32)
+    y = jax.random.normal(ky, (rows, d), jnp.float32)
+
+    def time_blocks(bm: int, bn: int) -> float:
+        if out_width > 1:
+            fn = lambda: ops.flash_score_stats(  # noqa: E731
+                x, 1.0, precision=precision, block_m=bm, block_n=bn,
+            )
+        else:
+            fn = lambda: ops.flash_kde(  # noqa: E731
+                x, y, 1.0, precision=precision, block_m=bm, block_n=bn,
+            )
+        jax.block_until_ready(fn())          # compile outside timing
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return time_blocks
+
+
+def autotune_blocks(
+    rows: int, cols: int, d: int, *, out_width: int = 1,
+    precision: str = "f32",
+    block_ms: Sequence[int] = DEFAULT_BLOCK_MS,
+    block_ns: Sequence[int] = DEFAULT_BLOCK_NS,
+    measure: Optional[bool] = None,
+    time_fn: Optional[Callable[[int, int], float]] = None,
+    topk: int = 3,
+    vmem_itemsize: Optional[int] = None,
+) -> Tuple[int, int]:
+    """The tuned (block_m, block_n) for one streaming pairwise pass.
+
+    ``measure=None`` (default) times the shortlist's top-``topk`` on device
+    only when a custom ``time_fn`` is supplied or a real TPU backend is
+    attached; ``measure=False`` forces model-only; ``measure=True`` forces
+    timing (building a synthetic probe if no ``time_fn`` is given).
+    Winners are memoized process-wide, keyed by next-power-of-two padded
+    shape buckets, so a serving process tunes each regime once.
+    """
+    prec.validate(precision)
+    key = (_shape_bucket(rows), _shape_bucket(cols), d, out_width, precision,
+           tuple(block_ms), tuple(block_ns), vmem_itemsize)
+    with _LOCK:
+        if key in _CACHE:
+            return _CACHE[key]
+
+    cands = shortlist(rows, cols, d, out_width=out_width,
+                      precision=precision, block_ms=block_ms,
+                      block_ns=block_ns, vmem_itemsize=vmem_itemsize)
+    if not cands:
+        raise ValueError(
+            f"no feasible launch config for rows={rows} cols={cols} d={d} "
+            f"precision={precision} under the VMEM budget"
+        )
+
+    if measure is None:
+        import jax
+
+        measure = time_fn is not None or jax.default_backend() == "tpu"
+    best = cands[0]
+    if measure and len(cands) > 1:
+        fn = time_fn or _probe_time_fn(rows, cols, d, out_width, precision)
+        best = min(cands[:topk], key=lambda c: fn(c.block_m, c.block_n))
+
+    with _LOCK:
+        _CACHE[key] = best.blocks
+    return best.blocks
+
+
+def resolve_blocks(
+    block_m: BlockArg, block_n: BlockArg, rows: int, cols: int, d: int, *,
+    out_width: int = 1, precision: str = "f32",
+    row_multiple: Optional[int] = None,
+    col_multiple: Optional[int] = None,
+    measure: Optional[bool] = None,
+    vmem_itemsize: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Turn ``"auto"`` block args into tuned ints (ints pass through).
+
+    ``row_multiple`` / ``col_multiple`` constrain the tile to divide an
+    already-padded row/column count (the prepared serving path, where the
+    train tensors were padded at fit time and queries arrive pre-padded to
+    a shape bucket — the tile sweep must respect those layouts).
+    ``vmem_itemsize`` widens the VMEM feasibility gate (see modeled_cost)
+    for callers that will reuse the tile across precision tiers.
+    """
+    m_auto, n_auto = block_m == "auto", block_n == "auto"
+    if not m_auto and not n_auto:
+        return block_m, block_n
+
+    def _fitting(cands, multiple):
+        if multiple is None:
+            return tuple(cands)
+        fit = tuple(b for b in cands if multiple % b == 0)
+        # fall back to the largest power of two dividing the padded count
+        return fit or (math.gcd(multiple, 1 << 30),)
+
+    block_ms = _fitting(DEFAULT_BLOCK_MS, row_multiple) if m_auto \
+        else (block_m,)
+    block_ns = _fitting(DEFAULT_BLOCK_NS, col_multiple) if n_auto \
+        else (block_n,)
+    return autotune_blocks(
+        rows, cols, d, out_width=out_width, precision=precision,
+        block_ms=block_ms, block_ns=block_ns, measure=measure,
+        vmem_itemsize=vmem_itemsize,
+    )
+
+
+__all__ = [
+    "DEFAULT_BLOCK_MS", "DEFAULT_BLOCK_NS", "MXU_DERATE", "TunedConfig",
+    "modeled_cost", "shortlist", "autotune_blocks", "resolve_blocks",
+    "clear_cache", "cache_info",
+]

@@ -6,6 +6,16 @@ changes a result), precompute squared norms and transposed layouts (lane
 axis = the streamed column dimension, which is what the TPU wants), budget
 VMEM, launch the kernels, slice off padding and normalize.
 
+Two launch knobs thread through every wrapper here:
+
+  * ``precision`` — the GEMM-operand tier (``"f32"`` / ``"bf16"`` /
+    ``"bf16x2"``, kernels/precision.py).  Norms, distances, exponentials and
+    accumulators stay f32 at every tier; only the MXU operands shrink.
+  * ``block_m`` / ``block_n`` — the launch tile, either explicit ints or
+    ``"auto"`` (the default), which consults the model-guided autotuner
+    (kernels/autotune.py): cost-model shortlist on the padded problem,
+    optional on-device timing, memoized winners.
+
 Every function here has a pure-jnp oracle in ``ref.py`` and an allclose
 sweep in ``tests/``.
 """
@@ -14,11 +24,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bandwidth import gaussian_norm_const
+from repro.kernels import autotune
+from repro.kernels import precision as prec
 from repro.kernels.flash_kde import flash_kde_pallas
 from repro.kernels.flash_laplace import flash_laplace_pallas, sq_moment_pallas
 from repro.kernels.flash_score import flash_score_pallas
@@ -26,6 +39,8 @@ from repro.kernels.flash_score import flash_score_pallas
 PAD_VALUE = 1.0e6
 # VMEM is ~16 MiB/core on v5e; leave headroom for double buffering.
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+_STATIC = ("precision", "block_m", "block_n", "interpret")
 
 
 def _pad_to(x: jnp.ndarray, mult: int, value: float = PAD_VALUE) -> jnp.ndarray:
@@ -42,6 +57,18 @@ def _norms(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(x32 * x32, axis=-1, keepdims=True)
 
 
+def _tier_norms(hi: jnp.ndarray, lo: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """f32 squared norms of the points the tier-cast operands represent.
+
+    Computing norms from the *cast* operands (not the f32 originals) keeps
+    ``sq = ‖ŷ‖² + ‖x̂‖² − 2·ŷ·x̂`` an exact nonnegative squared distance of
+    slightly perturbed points, so reduced precision acts as a data
+    perturbation rather than cancellation noise in the exponent (see
+    kernels/precision.py).
+    """
+    return _norms(prec.reconstruct(hi, lo))
+
+
 def _inv2h2(h) -> jnp.ndarray:
     h = jnp.asarray(h, jnp.float32)
     return (1.0 / (2.0 * h * h)).reshape(1, 1)
@@ -49,27 +76,48 @@ def _inv2h2(h) -> jnp.ndarray:
 
 def vmem_tile_bytes(block_m: int, block_n: int, d: int,
                     itemsize: int = 4) -> int:
-    """Per-step VMEM working set (inputs + φ tile + output accumulator)."""
-    tiles = (
+    """Per-step VMEM working set (inputs + φ tile + output accumulator).
+
+    ``itemsize`` is the GEMM-operand byte width (4 f32, 2 bf16, 4 for the
+    two-plane bf16x2 split — ``precision.operand_bytes``); norms, the φ
+    tile, and the accumulator are always f32.
+    """
+    operand_elems = (
         block_m * d            # row tile
-        + block_m              # row norms
         + d * block_n          # xt column tile
         + block_n * (d + 1)    # xaug column tile
+    )
+    f32_elems = (
+        block_m                # row norms
         + block_n              # column norms
         + block_m * block_n    # φ tile (registers/VMEM intermediate)
         + block_m * (d + 1)    # accumulator
     )
-    return tiles * itemsize
+    return operand_elems * itemsize + f32_elems * 4
 
 
-def _check_vmem(block_m: int, block_n: int, d: int) -> None:
-    b = vmem_tile_bytes(block_m, block_n, d)
+def _check_vmem(block_m: int, block_n: int, d: int,
+                itemsize: int = 4) -> None:
+    b = vmem_tile_bytes(block_m, block_n, d, itemsize)
     if b > VMEM_BUDGET_BYTES:
         raise ValueError(
             f"tile working set {b/2**20:.1f} MiB exceeds VMEM budget "
             f"({VMEM_BUDGET_BYTES/2**20:.0f} MiB): block_m={block_m} "
-            f"block_n={block_n} d={d}"
+            f"block_n={block_n} d={d} itemsize={itemsize}"
         )
+
+
+def _resolve(block_m, block_n, rows, cols, d, *, out_width, precision,
+             interpret, row_multiple=None, col_multiple=None):
+    """Shared "auto"-tile resolution + dtype-aware VMEM gate."""
+    block_m, block_n = autotune.resolve_blocks(
+        block_m, block_n, rows, cols, d, out_width=out_width,
+        precision=precision, row_multiple=row_multiple,
+        col_multiple=col_multiple,
+        measure=False if interpret else None,
+    )
+    _check_vmem(block_m, block_n, d, prec.operand_bytes(precision))
+    return block_m, block_n
 
 
 # ---------------------------------------------------------------------------
@@ -77,27 +125,42 @@ def _check_vmem(block_m: int, block_n: int, d: int) -> None:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_score_stats(
     x: jnp.ndarray,
     h,
     *,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ):
     """(S0, S1) score statistics over the train set via the fused kernel."""
+    prec.validate(precision)
     n, d = x.shape
-    _check_vmem(block_m, block_n, d)
+    block_m, block_n = _resolve(
+        block_m, block_n, n, n, d, out_width=d + 1, precision=precision,
+        interpret=interpret,
+    )
     mult = math.lcm(block_m, block_n)
     xp = _pad_to(x, mult)
     npad = xp.shape[0]
     xaug = jnp.concatenate(
         [xp, jnp.ones((npad, 1), xp.dtype)], axis=1
     )
+    if precision == "f32":
+        x_ops = (xp, None)
+        xt_ops = (xp.astype(jnp.float32).T.astype(xp.dtype), None)
+        xaug_ops = (xaug, None)
+        nrm = _norms(xp)
+    else:
+        x_ops = prec.cast_operand(xp.astype(jnp.float32), precision)
+        xt_ops = (x_ops[0].T, None if x_ops[1] is None else x_ops[1].T)
+        xaug_ops = prec.cast_operand(xaug.astype(jnp.float32), precision)
+        nrm = _tier_norms(*x_ops)
     s1aug = flash_score_pallas(
-        xp, _norms(xp), xp.astype(jnp.float32).T.astype(xp.dtype), xaug,
-        _inv2h2(h),
+        x_ops[0], nrm, xt_ops[0], xaug_ops[0], _inv2h2(h),
+        x_ops[1], xt_ops[1], xaug_ops[1],
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     s0 = s1aug[:n, d]
@@ -105,22 +168,22 @@ def flash_score_stats(
     return s0, s1
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_sdkde_shift(
     x: jnp.ndarray,
     h,
     *,
     score_h=None,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Debiased samples x^SD = x + (h²/2)·ŝ(x), score via the flash kernel."""
     sh = h if score_h is None else score_h
     s0, s1 = flash_score_stats(
-        x, sh, block_m=block_m, block_n=block_n, interpret=interpret
+        x, sh, precision=precision,
+        block_m=block_m, block_n=block_n, interpret=interpret,
     )
     sh = jnp.asarray(sh, jnp.float32)
     h = jnp.asarray(h, jnp.float32)
@@ -134,80 +197,111 @@ def flash_sdkde_shift(
 # ---------------------------------------------------------------------------
 
 
-def _prep_eval(x, y, block_m, block_n):
-    d = x.shape[-1]
-    _check_vmem(block_m, block_n, d)
+def _prep_eval(x, y, block_m, block_n, precision):
+    """Pad, transpose, norm and tier-cast one (train, queries) pair."""
     yp = _pad_to(y, block_m)
     xp = _pad_to(x, block_n)
-    xt = xp.astype(jnp.float32).T.astype(xp.dtype)
-    return yp, xp, xt
+    if precision == "f32":
+        y_ops = (yp, None)
+        xt_ops = (xp.astype(jnp.float32).T.astype(xp.dtype), None)
+        nrm_y, nrm_x = _norms(yp), _norms(xp).reshape(1, -1)
+    else:
+        y_ops = prec.cast_operand(yp.astype(jnp.float32), precision)
+        x_ops = prec.cast_operand(xp.astype(jnp.float32), precision)
+        # cast commutes with transpose: the lane-major column planes are
+        # the row-layout planes transposed, and the column norms come from
+        # the same cast values the kernel will stream.
+        xt_ops = (x_ops[0].T, None if x_ops[1] is None else x_ops[1].T)
+        nrm_y = _tier_norms(*y_ops)
+        nrm_x = _tier_norms(*x_ops).reshape(1, -1)
+    return y_ops, xt_ops, nrm_y, nrm_x
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_kde(
     x: jnp.ndarray,
     y: jnp.ndarray,
     h,
     *,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Normalized Gaussian KDE densities at ``y`` (train set ``x``)."""
+    prec.validate(precision)
     n, d = x.shape
     m = y.shape[0]
-    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
+    block_m, block_n = _resolve(
+        block_m, block_n, m, n, d, out_width=1, precision=precision,
+        interpret=interpret,
+    )
+    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
+                                             precision)
     sums = flash_kde_pallas(
-        yp, _norms(yp), xt, _norms(xp).reshape(1, -1), _inv2h2(h),
+        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     h = jnp.asarray(h, jnp.float32)
     return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_laplace_kde(
     x: jnp.ndarray,
     y: jnp.ndarray,
     h,
     *,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused Flash-Laplace-KDE densities at ``y`` — single quadratic pass."""
+    prec.validate(precision)
     n, d = x.shape
     m = y.shape[0]
-    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
+    block_m, block_n = _resolve(
+        block_m, block_n, m, n, d, out_width=1, precision=precision,
+        interpret=interpret,
+    )
+    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
+                                             precision)
     sums = flash_laplace_pallas(
-        yp, _norms(yp), xt, _norms(xp).reshape(1, -1), _inv2h2(h),
+        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     h = jnp.asarray(h, jnp.float32)
     return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def laplace_kde_nonfused(
     x: jnp.ndarray,
     y: jnp.ndarray,
     h,
     *,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Non-fused Laplace baseline: two quadratic kernel launches (Fig. 4)."""
+    prec.validate(precision)
     n, d = x.shape
     m = y.shape[0]
-    yp, xp, xt = _prep_eval(x, y, block_m, block_n)
-    nrm_y, nrm_x = _norms(yp), _norms(xp).reshape(1, -1)
+    block_m, block_n = _resolve(
+        block_m, block_n, m, n, d, out_width=1, precision=precision,
+        interpret=interpret,
+    )
+    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
+                                             precision)
     kde_sums = flash_kde_pallas(
-        yp, nrm_y, xt, nrm_x, _inv2h2(h),
+        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     sq_mom = sq_moment_pallas(
-        yp, nrm_y, xt, nrm_x, _inv2h2(h),
+        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     h = jnp.asarray(h, jnp.float32)
@@ -220,32 +314,53 @@ def laplace_kde_nonfused(
 # ---------------------------------------------------------------------------
 
 
-def prepare_train_columns(x: jnp.ndarray, *, block_n: int = 512):
+class TrainColumns(NamedTuple):
+    """Fit-time prepared train tensors for one precision tier."""
+
+    xt: jnp.ndarray                 # (d, n_padded) tier-cast hi plane
+    xt_lo: Optional[jnp.ndarray]    # (d, n_padded) bf16 lo plane (bf16x2)
+    nrm_x: jnp.ndarray              # (1, n_padded) f32 column norms
+
+
+def prepare_train_columns(x: jnp.ndarray, *, block_n: int = 512,
+                          precision: str = "f32") -> TrainColumns:
     """One-time train-side prep for repeated evaluation against the same set.
 
     Pads the (debiased) train set to a ``block_n`` multiple with sentinel
     points, builds the transposed (d, n) layout the kernels stream as lane-
-    major column tiles, and precomputes the column squared norms.  The
-    returned ``(xt, nrm_x)`` pair is what ``flash_kde_prepared`` consumes —
-    the serving registry caches it so none of this work is repeated per
-    query batch.
+    major column tiles (cast to the requested precision tier — for bf16x2
+    both hi and lo planes), and precomputes the f32 column squared norms.
+    The serving registry caches the result per tier so none of this work is
+    repeated per query batch.
     """
+    prec.validate(precision)
+    if block_n == "auto":
+        _, block_n = autotune.resolve_blocks(
+            128, "auto", rows=4096, cols=x.shape[0], d=x.shape[-1],
+            precision=precision, measure=False,
+        )
     xp = _pad_to(x, block_n)
-    xt = xp.astype(jnp.float32).T.astype(xp.dtype)
-    return xt, _norms(xp).reshape(1, -1)
+    if precision == "f32":
+        xt, xt_lo = xp.astype(jnp.float32).T.astype(xp.dtype), None
+        nrm_x = _norms(xp).reshape(1, -1)
+    else:
+        x_hi, x_lo = prec.cast_operand(xp.astype(jnp.float32), precision)
+        xt, xt_lo = x_hi.T, None if x_lo is None else x_lo.T
+        nrm_x = _tier_norms(x_hi, x_lo).reshape(1, -1)
+    return TrainColumns(xt, xt_lo, nrm_x)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "interpret", "laplace")
-)
+@functools.partial(jax.jit, static_argnames=_STATIC + ("laplace",))
 def flash_kde_prepared(
     yp: jnp.ndarray,       # (m, d) queries, ALREADY padded to block_m multiple
-    xt: jnp.ndarray,       # (d, n) from prepare_train_columns
+    xt: jnp.ndarray,       # (d, n) from prepare_train_columns (tier-cast)
     nrm_x: jnp.ndarray,    # (1, n) from prepare_train_columns
     h,
+    xt_lo: jnp.ndarray | None = None,  # (d, n) lo plane (bf16x2 tier)
     *,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
     laplace: bool = False,
 ) -> jnp.ndarray:
@@ -254,15 +369,31 @@ def flash_kde_prepared(
     Skips the per-call padding, transposition and norm precomputation that
     ``flash_kde`` does — the serving layer pads queries to shape-bucket
     multiples of ``block_m`` up front and reuses the prepared train tensors
-    across every batch.  Returns raw sums (m,); the caller divides by
-    ``n_true · (2π)^{d/2} h^d`` (padding rows give ~0 and are sliced off by
-    the caller).
+    (cached per precision tier) across every batch.  Returns raw sums (m,);
+    the caller divides by ``n_true · (2π)^{d/2} h^d`` (padding rows give ~0
+    and are sliced off by the caller).
     """
-    d = yp.shape[-1]
-    _check_vmem(block_m, block_n, d)
+    prec.validate(precision)
+    if (precision == "bf16x2") != (xt_lo is not None):
+        raise ValueError(
+            "bf16x2 needs prepared lo planes (and other tiers must not "
+            f"pass them): precision={precision} xt_lo={xt_lo is not None}"
+        )
+    m, d = yp.shape
+    n = xt.shape[1]
+    block_m, block_n = _resolve(
+        block_m, block_n, m, n, d, out_width=1, precision=precision,
+        interpret=interpret, row_multiple=m, col_multiple=n,
+    )
+    if precision == "f32":
+        y_hi, y_lo = yp, None
+        nrm_y = _norms(yp)
+    else:
+        y_hi, y_lo = prec.cast_operand(yp.astype(jnp.float32), precision)
+        nrm_y = _tier_norms(y_hi, y_lo)
     kernel = flash_laplace_pallas if laplace else flash_kde_pallas
     sums = kernel(
-        yp, _norms(yp), xt, nrm_x, _inv2h2(h),
+        y_hi, nrm_y, xt, nrm_x, _inv2h2(h), y_lo, xt_lo,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     return sums[:, 0]
@@ -273,22 +404,24 @@ def flash_kde_prepared(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_sdkde(
     x: jnp.ndarray,
     y: jnp.ndarray,
     h,
     *,
     score_h=None,
-    block_m: int = 128,
-    block_n: int = 512,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Full Flash-SD-KDE: score pass → shift → KDE at queries (normalized)."""
     x_sd = flash_sdkde_shift(
-        x, h, score_h=score_h,
+        x, h, score_h=score_h, precision=precision,
         block_m=block_m, block_n=block_n, interpret=interpret,
     )
     return flash_kde(
-        x_sd, y, h, block_m=block_m, block_n=block_n, interpret=interpret
+        x_sd, y, h, precision=precision,
+        block_m=block_m, block_n=block_n, interpret=interpret,
     )

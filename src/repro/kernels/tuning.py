@@ -70,13 +70,16 @@ class KernelCost:
 
 def pair_pass_cost(
     rows: int, cols: int, d: int, *, block_m: int, block_n: int,
-    out_width: Optional[int] = None,
+    out_width: Optional[int] = None, itemsize: int = 4,
 ) -> KernelCost:
     """One streaming pairwise pass (score OR kde OR laplace kernel).
 
     ``rows`` — resident row tile set (queries / eval points, per device);
     ``cols`` — streamed column points (per device, over the full ring);
-    ``out_width`` — accumulator width (d+1 for score S1aug, 1 for KDE sums).
+    ``out_width`` — accumulator width (d+1 for score S1aug, 1 for KDE sums);
+    ``itemsize`` — bytes/element of the GEMM *operands* (4 for f32, 2 for
+    bf16, 4 for the two-plane bf16x2 split — kernels/precision.py).  Norms,
+    the φ tile, and the accumulator are f32 at every tier.
 
     HBM per (row-tile × col-tile), the paper's §4.1 ledger: row tile loaded
     once per row block (amortized over the column sweep), column tile
@@ -85,9 +88,11 @@ def pair_pass_cost(
     ow = out_width if out_width is not None else 1
     m_tiles = -(-rows // block_m)
     n_tiles = -(-cols // block_n)
-    per_tile = 4 * (block_n * d + block_n)           # streamed cols + norms
-    per_row_block = 4 * (block_m * d + block_m       # row tile + norms
-                         + block_m * ow)             # accumulator writeback
+    per_tile = (itemsize * block_n * d               # streamed cols
+                + 4 * block_n)                       # + f32 norms
+    per_row_block = (itemsize * block_m * d          # row tile
+                     + 4 * block_m                   # + f32 norms
+                     + 4 * block_m * ow)             # accumulator writeback
     hbm = m_tiles * n_tiles * per_tile + m_tiles * per_row_block
 
     pairs = float(rows) * cols
@@ -96,10 +101,12 @@ def pair_pass_cost(
     exps = pairs
     scalar = 4.0 * pairs + (2.0 * pairs if ow == 1 else 0.0)
 
-    # VMEM working set: matches ops.vmem_tile_bytes
-    vmem = 4 * (
-        block_m * d + block_m + d * block_n + block_n * (d + 1)
-        + block_n + block_m * block_n + block_m * (d + 1)
+    # VMEM working set: matches ops.vmem_tile_bytes (operands at itemsize,
+    # f32 norms / φ tile / accumulator at 4 bytes)
+    vmem = itemsize * (
+        block_m * d + d * block_n + block_n * (d + 1)
+    ) + 4 * (
+        block_m + block_n + block_m * block_n + block_m * (d + 1)
     )
     return KernelCost(block_m, block_n, hbm, gram + accum, exps, scalar, vmem)
 
@@ -139,15 +146,16 @@ def sweep_blocks(
     rows: int, cols: int, d: int, *,
     block_ms: Iterable[int] = (64, 128, 256, 512, 1024, 2048, 4096),
     block_ns: Iterable[int] = (256, 512, 1024, 2048, 4096),
-    out_width: Optional[int] = None,
+    out_width: Optional[int] = None, itemsize: int = 4,
 ):
     """The §6.2 hillclimb: every launch config under the VMEM budget,
-    sorted by modeled step time."""
+    sorted by modeled step time.  (kernels/autotune.py layers padding-aware,
+    precision-derated costs and a winner cache on top of this sweep.)"""
     rows_aligned = []
     for bm in block_ms:
         for bn in block_ns:
             c = pair_pass_cost(rows, cols, d, block_m=bm, block_n=bn,
-                               out_width=out_width)
+                               out_width=out_width, itemsize=itemsize)
             if c.vmem_bytes <= VMEM_BUDGET:
                 rows_aligned.append(c)
     return sorted(rows_aligned, key=lambda c: c.step_time)

@@ -8,10 +8,14 @@ traffic is coalesced into jit-stable shape buckets.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional, Tuple
+from typing import Literal, Optional, Tuple, Union
+
+from repro.kernels.precision import validate as _validate_precision
 
 Backend = Literal["jnp", "pallas", "ring"]
 Method = Literal["kde", "sdkde", "laplace"]
+Precision = Literal["f32", "bf16", "bf16x2"]   # = kernels.precision.PRECISIONS
+BlockArg = Union[int, Literal["auto"]]
 
 
 def _round_up(n: int, mult: int) -> int:
@@ -34,10 +38,19 @@ class ServeConfig:
 
     # estimator knobs (mirrors repro.core.estimator.EstimatorConfig)
     block: int = 1024            # jnp streaming column-block size
-    block_m: int = 128           # Pallas row tile
-    block_n: int = 512           # Pallas column tile
+    block_m: BlockArg = 128      # Pallas row tile (int or "auto" = autotuned)
+    block_n: BlockArg = 512      # Pallas column tile (int or "auto")
     interpret: bool = True       # Pallas interpret mode (CPU validation)
     score_h: Optional[float] = None
+    # Pallas GEMM-operand tier (kernels/precision.py): the tier queries are
+    # served at by default; query()/query_many() may override per request,
+    # and the registry caches prepared train tensors per tier.
+    precision: Precision = "f32"
+    # Tier for the one-time O(n²·d) debias fit.  The fit is amortized off
+    # the latency path, so it defaults to full precision regardless of the
+    # serving tier — reduced-precision *queries* perturb one GEMM, while a
+    # reduced-precision fit would bake its error into every future answer.
+    fit_precision: Precision = "f32"
 
     # micro-batching policy
     min_batch: int = 128         # smallest shape bucket
@@ -51,23 +64,34 @@ class ServeConfig:
             )
         if self.cache_buckets < 1:
             raise ValueError("cache_buckets must be >= 1")
+        for p in (self.precision, self.fit_precision):
+            _validate_precision(p)
+        for b in (self.block_m, self.block_n):
+            if not (b == "auto" or (isinstance(b, int) and b > 0)):
+                raise ValueError(f"bad Pallas block {b!r} (int or 'auto')")
 
-    def row_multiple(self, ring_size: int = 1) -> int:
+    def row_multiple(self, ring_size: int = 1,
+                     block_m: Optional[int] = None) -> int:
         """Row-count multiple every dispatched batch must honor.
 
         Pallas tiles rows by ``block_m``; the ring shards rows over
         ``ring_size`` devices; the jnp path is shape-agnostic but still
-        bucketed for jit-cache stability.
+        bucketed for jit-cache stability.  When the config says
+        ``block_m="auto"`` the caller passes the fit-time tuned tile
+        (``PreparedEstimator.block_m``) — before a fit resolves it, the
+        ladder falls back to the 128-row default tile.
         """
         if self.backend == "pallas":
-            return self.block_m
+            bm = block_m if block_m is not None else self.block_m
+            return bm if isinstance(bm, int) else 128
         if self.backend == "ring":
             return max(1, ring_size)
         return 1
 
-    def bucket_sizes(self, ring_size: int = 1) -> Tuple[int, ...]:
+    def bucket_sizes(self, ring_size: int = 1,
+                     block_m: Optional[int] = None) -> Tuple[int, ...]:
         """The geometric ladder of padded batch shapes this config serves."""
-        mult = self.row_multiple(ring_size)
+        mult = self.row_multiple(ring_size, block_m)
         sizes, b = [], self.min_batch
         while True:
             sizes.append(_round_up(min(b, self.max_batch), mult))
@@ -76,14 +100,16 @@ class ServeConfig:
             b *= 2
         return tuple(dict.fromkeys(sizes))
 
-    def bucket_for(self, m: int, ring_size: int = 1) -> int:
+    def bucket_for(self, m: int, ring_size: int = 1,
+                   block_m: Optional[int] = None) -> int:
         """Smallest shape bucket that fits an ``m``-row query batch."""
         if m <= 0:
             raise ValueError(f"empty query batch (m={m})")
-        for b in self.bucket_sizes(ring_size):
+        sizes = self.bucket_sizes(ring_size, block_m)
+        for b in sizes:
             if m <= b:
                 return b
-        return self.bucket_sizes(ring_size)[-1]  # chunked by the engine
+        return sizes[-1]  # chunked by the engine
 
 
-__all__ = ["Backend", "Method", "ServeConfig"]
+__all__ = ["Backend", "Method", "Precision", "BlockArg", "ServeConfig"]

@@ -63,23 +63,30 @@ class ServeEngine:
 
     # -- query path ------------------------------------------------------
 
-    def query(self, key: str, y: jnp.ndarray) -> jnp.ndarray:
-        """Densities for one request; pads to a bucket, times the dispatch."""
+    def query(self, key: str, y: jnp.ndarray,
+              precision: Optional[str] = None) -> jnp.ndarray:
+        """Densities for one request; pads to a bucket, times the dispatch.
+
+        ``precision`` overrides the config's GEMM-operand tier for this
+        request (pallas backend; prepared train tensors are cached per
+        tier, so mixing tiers on one estimator costs one extra prepare).
+        """
         prep = self.registry.get(key)
         y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
         t0 = time.perf_counter()
-        dens = jax.block_until_ready(self._dispatch(prep, y))
+        dens = jax.block_until_ready(self._dispatch(prep, y, precision))
         self.latency.record(time.perf_counter() - t0, y.shape[0], 1)
         return dens
 
     def query_many(
-        self, key: str, batches: Sequence[jnp.ndarray]
+        self, key: str, batches: Sequence[jnp.ndarray],
+        precision: Optional[str] = None,
     ) -> List[jnp.ndarray]:
         """Coalesce several ragged requests into one padded dispatch."""
         prep = self.registry.get(key)
         fused, sizes = coalesce(batches)
         t0 = time.perf_counter()
-        dens = jax.block_until_ready(self._dispatch(prep, fused))
+        dens = jax.block_until_ready(self._dispatch(prep, fused, precision))
         self.latency.record(
             time.perf_counter() - t0, fused.shape[0], len(sizes)
         )
@@ -87,31 +94,36 @@ class ServeEngine:
 
     # -- internals -------------------------------------------------------
 
-    def _dispatch(self, prep: PreparedEstimator, y: jnp.ndarray) -> jnp.ndarray:
+    def _dispatch(self, prep: PreparedEstimator, y: jnp.ndarray,
+                  precision: Optional[str] = None) -> jnp.ndarray:
         cfg = prep.config
-        top = cfg.bucket_sizes(prep.ring_size)[-1]
+        tier = precision or cfg.precision
+        top = cfg.bucket_sizes(prep.ring_size, prep.block_m)[-1]
         m = y.shape[0]
         if m <= top:
-            return self._run_bucket(prep, y)
+            return self._run_bucket(prep, y, tier)
         # oversize batch: chunk at the largest bucket (each chunk jit-stable)
         parts = [
-            self._run_bucket(prep, y[off:off + top])
+            self._run_bucket(prep, y[off:off + top], tier)
             for off in range(0, m, top)
         ]
         return jnp.concatenate(parts)
 
-    def _run_bucket(self, prep: PreparedEstimator, y: jnp.ndarray):
+    def _run_bucket(self, prep: PreparedEstimator, y: jnp.ndarray,
+                    tier: str):
         cfg = prep.config
-        bucket = cfg.bucket_for(y.shape[0], prep.ring_size)
+        bucket = cfg.bucket_for(y.shape[0], prep.ring_size, prep.block_m)
         # Keyed on the fit generation: a refit (or evict + re-register)
-        # produces a new generation, so stale executables can never serve it.
+        # produces a new generation, so stale executables can never serve
+        # it.  The tier is part of the key — each precision gets its own
+        # bucket executable against its own prepared train tensors.
         fn = self.cache.get_or_build(
-            (prep.key, prep.generation, bucket),
-            lambda: self._build_executable(prep),
+            (prep.key, prep.generation, tier, bucket),
+            lambda: self._build_executable(prep, tier),
         )
         return fn(pad_queries(y, bucket))[: y.shape[0]]
 
-    def _build_executable(self, prep: PreparedEstimator):
+    def _build_executable(self, prep: PreparedEstimator, tier: str):
         """Bucket executable: padded (bucket, d) queries → (bucket,) dens.
 
         Each executable owns its jit wrapper (train tensors passed as
@@ -125,12 +137,14 @@ class ServeEngine:
         if cfg.backend == "pallas":
             from repro.kernels import ops
 
-            jfn = jax.jit(lambda yp, xt, nrm_x: ops.flash_kde_prepared(
-                yp, xt, nrm_x, prep.h,
-                block_m=cfg.block_m, block_n=cfg.block_n,
+            cols = prep.columns_for(tier)
+            jfn = jax.jit(lambda yp, xt, nrm_x, xt_lo: ops.flash_kde_prepared(
+                yp, xt, nrm_x, prep.h, xt_lo,
+                precision=tier,
+                block_m=prep.block_m, block_n=prep.block_n,
                 interpret=cfg.interpret, laplace=laplace,
             ) / prep.norm)
-            return lambda yp: jfn(yp, prep.xt, prep.nrm_x)
+            return lambda yp: jfn(yp, cols.xt, cols.nrm_x, cols.xt_lo)
 
         if cfg.backend == "ring":
             from repro.distributed import ring

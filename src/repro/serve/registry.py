@@ -36,16 +36,58 @@ class PreparedEstimator:
                              # refit/evict+refit never serves stale executables
     points: jnp.ndarray      # (n, d) train points (debiased for sdkde)
     norm: float              # n_true · (2π)^{d/2} · h^d
-    # pallas backend: padded transposed layout + column norms (ops.py)
-    xt: Optional[jnp.ndarray] = None
-    nrm_x: Optional[jnp.ndarray] = None
+    # pallas backend: fit-time resolved launch tiles ("auto" in the config
+    # consults the kernels/autotune.py model once per fit); the prepared
+    # padded/transposed column layouts live in ``_columns``, one entry per
+    # precision tier (the fit tier eagerly, others lazily on first query).
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
     # ring backend: device mesh + row-sharded (padded) points
     mesh: object = None
     x_sharded: Optional[jnp.ndarray] = None
+    _columns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def ring_size(self) -> int:
         return self.mesh.devices.size if self.mesh is not None else 1
+
+    def columns_for(self, precision: str):
+        """Prepared train tensors for one tier (built once, then cached).
+
+        Returns the ``ops.TrainColumns`` (xt, xt_lo, nrm_x) triple the
+        prepared fast path consumes; the per-tier cache is what lets one
+        registered dataset serve f32 and bf16 traffic side by side without
+        re-padding/transposing per request.
+        """
+        if precision not in self._columns:
+            from repro.kernels import ops
+
+            self._columns[precision] = ops.prepare_train_columns(
+                self.points, block_n=self.block_n, precision=precision
+            )
+        return self._columns[precision]
+
+    # Convenience views of the serving-tier prepared state (pallas backend;
+    # None elsewhere).  ``_columns`` is the single source of truth.
+    def _default_columns(self):
+        if self.config.backend != "pallas":
+            return None
+        return self.columns_for(self.config.precision)
+
+    @property
+    def xt(self) -> Optional[jnp.ndarray]:
+        cols = self._default_columns()
+        return None if cols is None else cols.xt
+
+    @property
+    def xt_lo(self) -> Optional[jnp.ndarray]:
+        cols = self._default_columns()
+        return None if cols is None else cols.xt_lo
+
+    @property
+    def nrm_x(self) -> Optional[jnp.ndarray]:
+        cols = self._default_columns()
+        return None if cols is None else cols.nrm_x
 
 
 class EstimatorRegistry:
@@ -116,10 +158,23 @@ class EstimatorRegistry:
         )
 
         if cfg.backend == "pallas":
-            from repro.kernels import ops
+            from repro.kernels import autotune, ops
 
-            prep.xt, prep.nrm_x = ops.prepare_train_columns(
-                points, block_n=cfg.block_n
+            # Resolve "auto" tiles once per fit: rows = the largest shape
+            # bucket this estimator will ever dispatch, cols = the train
+            # count.  The resolved tiles shape the bucket ladder AND the
+            # prepared column padding, so they live on the estimator.
+            # vmem_itemsize=4 gates feasibility at the widest operand tier
+            # (f32 / bf16x2), because per-request precision overrides reuse
+            # this one tile across every tier.
+            prep.block_m, prep.block_n = autotune.resolve_blocks(
+                cfg.block_m, cfg.block_n, rows=cfg.max_batch, cols=n, d=d,
+                out_width=1, precision=cfg.precision,
+                measure=False if cfg.interpret else None,
+                vmem_itemsize=4,
+            )
+            prep._columns[cfg.precision] = ops.prepare_train_columns(
+                points, block_n=prep.block_n, precision=cfg.precision
             )
         elif cfg.backend == "ring":
             from repro.distributed import ring
@@ -146,6 +201,7 @@ class EstimatorRegistry:
             backend=cfg.backend, block=cfg.block,
             block_m=cfg.block_m, block_n=cfg.block_n,
             interpret=cfg.interpret, score_h=cfg.score_h,
+            precision=cfg.fit_precision,
         )
         return SDKDE(h, est_cfg).fit(x).x_sd[:n]
 

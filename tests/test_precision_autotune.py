@@ -1,0 +1,309 @@
+"""Precision tiers (kernels/precision.py) + block autotuner (kernels/autotune.py).
+
+Covers the PR-3 acceptance surface:
+  * allclose sweeps per tier against the pure-jnp oracles — bf16x2 within
+    1e-4 rtol, bf16 within 1e-2 rtol (tail densities under a small atol
+    floor, as every allclose in this repo);
+  * the prepared serving fast path with ``laplace=True`` and per-tier
+    padded-query behavior (padding must contribute exactly 0 to real rows
+    at every tier);
+  * the model-guided autotuner: feasibility, memoization, measured top-k,
+    "auto" resolution constraints, and the acceptance cell (autotuned bf16
+    beats the fixed f32 128×512 on modeled step time at the paper's
+    32k-sample 16-d problem);
+  * dtype-aware VMEM budgeting (bf16 tiles cost half the f32 budget).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import gaussian_norm_const
+from repro.kernels import autotune, ops, ref
+from repro.kernels import precision as prec
+from repro.kernels.tuning import VMEM_BUDGET
+
+# (rtol, atol-as-fraction-of-peak) per tier: the documented accuracy bars.
+# The atol floor covers deep-tail densities (orders of magnitude below the
+# peak), exactly like the seed's f32 allclose sweeps; the rtol is the
+# headline bar — 1e-4 for the compensated bf16x2 split, 1e-2 for raw bf16.
+TIER_TOL = {"f32": (2e-4, 1e-6), "bf16": (1e-2, 5e-3), "bf16x2": (1e-4, 1e-5)}
+TIERS = ("f32", "bf16", "bf16x2")
+
+# (n, m, d, h): bandwidths at the Silverman-ish scale for each dimension —
+# bf16's documented 1e-2 bar presumes a statistically sane h (undersmoothing
+# far below it amplifies the operand rounding through the exponential).
+SHAPES = [
+    (300, 50, 16, 1.0),     # non-multiples: padding path
+    (512, 128, 8, 0.9),
+    (256, 64, 32, 1.5),
+    (128, 64, 1, 0.7),      # 1-D (the appendix setting)
+]
+
+
+def _data(n, m, d, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    y = jax.random.normal(ky, (m, d), jnp.float32) * 1.2
+    return x, y
+
+
+def _assert_tier(got, want, tier, rtol_scale=1.0):
+    rtol, atol_frac = TIER_TOL[tier]
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=rtol * rtol_scale,
+        atol=atol_frac * float(np.max(np.abs(np.asarray(want)))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Allclose sweeps per tier vs the ref.py oracles.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d,h", SHAPES)
+@pytest.mark.parametrize("tier", TIERS)
+def test_flash_kde_precision_tiers(n, m, d, h, tier):
+    x, y = _data(n, m, d)
+    got = ops.flash_kde(x, y, h, precision=tier, block_m=32, block_n=128,
+                        interpret=True)
+    want = ref.ref_kde_sums(x, y, h) / (n * gaussian_norm_const(d, 1.0)
+                                        * h**d)
+    _assert_tier(got, want, tier)
+
+
+@pytest.mark.parametrize("n,d", [(300, 16), (512, 8)])
+@pytest.mark.parametrize("tier", TIERS)
+def test_flash_score_stats_precision_tiers(n, d, tier):
+    x, _ = _data(n, 1, d, seed=1)
+    h = 0.8
+    s0, s1 = ops.flash_score_stats(x, h, precision=tier, block_m=32,
+                                   block_n=128, interpret=True)
+    r0, r1 = ref.ref_score_stats(x, h)
+    _assert_tier(s0, r0, tier)
+    _assert_tier(s1, r1, tier)
+
+
+@pytest.mark.parametrize("n,m,d,h", [(300, 50, 16, 1.0), (256, 64, 8, 1.0)])
+@pytest.mark.parametrize("tier", TIERS)
+def test_flash_laplace_precision_tiers(n, m, d, h, tier):
+    x, y = _data(n, m, d, seed=2)
+    got = ops.flash_laplace_kde(x, y, h, precision=tier, block_m=32,
+                                block_n=128, interpret=True)
+    want = ref.ref_laplace_sums(x, y, h) / (n * gaussian_norm_const(d, 1.0)
+                                            * h**d)
+    # the Laplace factor crosses zero, so pure relative error is undefined
+    # at the crossings — the tier bar applies against the peak magnitude
+    _assert_tier(got, want, tier, rtol_scale=2.0)
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_full_sdkde_pipeline_precision_tiers(tier):
+    """flash_sdkde per tier vs the f32 jnp reference path (end to end)."""
+    from repro.core import kde
+
+    x, y = _data(300, 77, 16, seed=3)
+    h = 0.6
+    got = ops.flash_sdkde(x, y, h, precision=tier, block_m=32, block_n=128,
+                          interpret=True)
+    want = kde.sdkde_eval(x, y, h, block=128)
+    _assert_tier(got, want, tier)
+
+
+# ---------------------------------------------------------------------------
+# Prepared fast path: laplace coverage + padding exactness per tier.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("laplace", [False, True])
+def test_flash_kde_prepared_tiers_and_laplace(tier, laplace):
+    x, y = _data(320, 48, 8, seed=4)
+    h = 1.0
+    cols = ops.prepare_train_columns(x, block_n=64, precision=tier)
+    yp = ops._pad_to(y, 16)
+    sums = ops.flash_kde_prepared(
+        yp, cols.xt, cols.nrm_x, h, cols.xt_lo, precision=tier,
+        block_m=16, block_n=64, interpret=True, laplace=laplace,
+    )
+    oracle = ref.ref_laplace_sums if laplace else ref.ref_kde_sums
+    # Laplace sums cross zero → the bar applies against the peak (see
+    # test_flash_laplace_precision_tiers)
+    _assert_tier(sums[: y.shape[0]], oracle(x, y, h), tier,
+                 rtol_scale=2.0 if laplace else 1.0)
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_padding_contributes_exactly_zero_per_tier(tier):
+    """Sentinel train columns add exactly 0.0 to real rows at every tier,
+    and query padding never changes real rows: heavier padding (smaller
+    bucket tiles vs a 4× padded layout) must give bit-identical sums."""
+    x, y = _data(96, 24, 8, seed=5)
+    h = 0.7
+    light = ops.prepare_train_columns(x, block_n=32, precision=tier)
+    heavy = ops.prepare_train_columns(x, block_n=256, precision=tier)
+    assert heavy.xt.shape[1] == 256 > light.xt.shape[1]
+
+    kw = dict(precision=tier, block_m=8, interpret=True)
+    yp_light = ops._pad_to(y, 8)
+    yp_heavy = ops._pad_to(y, 64)
+    s_light = ops.flash_kde_prepared(
+        yp_light, light.xt, light.nrm_x, h, light.xt_lo, block_n=32, **kw
+    )
+    s_heavy = ops.flash_kde_prepared(
+        yp_heavy, heavy.xt, heavy.nrm_x, h, heavy.xt_lo, block_n=64, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(s_light[: y.shape[0]]),
+                                  np.asarray(s_heavy[: y.shape[0]]))
+
+
+def test_prepared_rejects_mismatched_lo_planes():
+    x, y = _data(64, 16, 4, seed=6)
+    cols32 = ops.prepare_train_columns(x, block_n=32, precision="f32")
+    colsx2 = ops.prepare_train_columns(x, block_n=32, precision="bf16x2")
+    yp = ops._pad_to(y, 16)
+    with pytest.raises(ValueError, match="bf16x2"):
+        ops.flash_kde_prepared(yp, colsx2.xt, colsx2.nrm_x, 0.5,
+                               precision="bf16x2", block_m=16, block_n=32,
+                               interpret=True)
+    with pytest.raises(ValueError, match="bf16x2"):
+        ops.flash_kde_prepared(yp, cols32.xt, cols32.nrm_x, 0.5,
+                               colsx2.xt_lo, precision="f32", block_m=16,
+                               block_n=32, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: feasibility, memoization, measurement, acceptance.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tuner_cache():
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_autotune_returns_feasible_blocks():
+    for tier in TIERS:
+        bm, bn = autotune.autotune_blocks(4096, 32768, 16, precision=tier,
+                                          measure=False)
+        c = autotune.modeled_cost(4096, 32768, 16, block_m=bm, block_n=bn,
+                                  precision=tier)
+        assert c is not None and c.vmem_bytes <= VMEM_BUDGET
+
+
+def test_autotune_memoizes_by_padded_shape_bucket():
+    assert autotune.cache_info() == {}
+    a = autotune.autotune_blocks(1000, 30000, 16, measure=False)
+    assert len(autotune.cache_info()) == 1
+    # same power-of-two shape bucket (1024, 32768) → cache hit, no growth
+    b = autotune.autotune_blocks(997, 32768, 16, measure=False)
+    assert a == b and len(autotune.cache_info()) == 1
+    autotune.autotune_blocks(997, 32768, 16, precision="bf16",
+                             measure=False)
+    assert len(autotune.cache_info()) == 2
+
+
+def test_autotune_measured_topk_overrides_model():
+    """With a time_fn, the hardware vote wins over the model ranking."""
+    ranked = autotune.shortlist(4096, 32768, 16, precision="bf16")
+    assert len(ranked) >= 2
+    # pretend the model's 2nd choice is actually fastest on "hardware"
+    target = ranked[1].blocks
+    picked = autotune.autotune_blocks(
+        4096, 32768, 16, precision="bf16",
+        time_fn=lambda bm, bn: 0.0 if (bm, bn) == target else 1.0,
+        topk=3,
+    )
+    assert picked == target
+
+
+def test_resolve_blocks_passthrough_and_constraints():
+    assert autotune.resolve_blocks(32, 128, 100, 1000, 8) == (32, 128)
+    bm, bn = autotune.resolve_blocks("auto", "auto", 64, 384, 8,
+                                     row_multiple=64, col_multiple=384,
+                                     measure=False)
+    assert 64 % bm == 0 and 384 % bn == 0
+    # fixed one side, auto the other
+    bm2, bn2 = autotune.resolve_blocks(16, "auto", 64, 512, 8,
+                                       measure=False)
+    assert bm2 == 16 and 512 % bn2 == 0 or bn2 in autotune.DEFAULT_BLOCK_NS
+
+
+def test_acceptance_bf16_auto_beats_f32_fixed_on_model():
+    """ISSUE 3 acceptance: autotuned bf16 on the 32k-sample 16-d cell beats
+    the fixed f32 128×512 configuration on modeled step time."""
+    n, d = 32768, 16
+    m = n // 8
+    fixed = autotune.modeled_cost(m, n, d, block_m=128, block_n=512,
+                                  precision="f32")
+    bm, bn = autotune.autotune_blocks(m, n, d, precision="bf16",
+                                      measure=False)
+    tuned = autotune.modeled_cost(m, n, d, block_m=bm, block_n=bn,
+                                  precision="bf16")
+    assert tuned.step_time < fixed.step_time, (tuned, fixed)
+
+
+def test_auto_is_the_wrapper_default_and_matches_explicit():
+    """block_m/block_n default to "auto" end to end (wrapper acceptance)."""
+    x, y = _data(200, 40, 8, seed=7)
+    got = ops.flash_kde(x, y, 0.7, interpret=True)           # all defaults
+    want = ops.flash_kde(x, y, 0.7, block_m=32, block_n=128,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware VMEM budgeting.
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_budget_is_dtype_aware():
+    f32_b = ops.vmem_tile_bytes(128, 1024, 256, itemsize=4)
+    bf16_b = ops.vmem_tile_bytes(128, 1024, 256, itemsize=2)
+    assert bf16_b < f32_b
+    # operand-dominated tile: bf16 halves the operand share exactly
+    operand_elems = 128 * 256 + 256 * 1024 + 1024 * 257
+    assert f32_b - bf16_b == 2 * operand_elems
+    assert prec.operand_bytes("bf16") == 2
+    assert prec.operand_bytes("bf16x2") == 4     # two bf16 planes
+
+
+def test_check_vmem_admits_bf16_tile_that_f32_rejects():
+    # operand-dominated config sitting between the bf16 and f32 budgets
+    bm, bn, d = 64, 2048, 1024
+    with pytest.raises(ValueError, match="VMEM"):
+        ops._check_vmem(bm, bn, d, itemsize=4)
+    ops._check_vmem(bm, bn, d, itemsize=2)       # fits at bf16
+
+
+# ---------------------------------------------------------------------------
+# Serve integration: per-tier dispatch + tuned tiles.
+# ---------------------------------------------------------------------------
+
+
+def test_serve_precision_override_and_per_tier_cache():
+    from repro.core import kde as refkde
+    from repro.serve import ServeConfig, ServeEngine
+
+    x, y = _data(256, 60, 8, seed=8)
+    h = 0.6
+    cfg = ServeConfig(backend="pallas", method="kde", interpret=True,
+                      block_m="auto", block_n="auto", precision="bf16x2",
+                      min_batch=16, max_batch=128, block=128)
+    eng = ServeEngine(cfg)
+    prep = eng.register("ds", x, h=h)
+    assert isinstance(prep.block_m, int) and isinstance(prep.block_n, int)
+    want = np.asarray(refkde.kde_eval(x, y, h, block=128))
+
+    _assert_tier(eng.query("ds", y), want, "bf16x2")
+    _assert_tier(eng.query("ds", y, precision="f32"), want, "f32")
+    _assert_tier(eng.query("ds", y, precision="bf16"), want, "bf16")
+    # one prepared-column set per tier, cached on the estimator
+    assert sorted(prep._columns) == ["bf16", "bf16x2", "f32"]
+    # bucket ladder respects the tuned row tile
+    assert all(b % prep.block_m == 0
+               for b in cfg.bucket_sizes(1, prep.block_m))
