@@ -20,6 +20,7 @@ from benchmarks import (
     fig4_fusion,
     fig5_utilization,
     precision_sweep,
+    pruning_sweep,
     serve_throughput,
     table1_methods,
 )
@@ -57,6 +58,9 @@ def main() -> None:
          serve_throughput.main,
          n=1024, d=8, backends=("jnp", "pallas"),
          batch_sizes=(8, 32), n_requests=8)
+    _run("pruning", "cluster-pruned vs dense: occupancy, certified error, "
+         "and the 256k×16d acceptance cell (kernels/spatial.py)",
+         pruning_sweep.main, smoke_n=8192, smoke_m=1024, acceptance=True)
     total = time.time() - t0
     common.write_bench_json(BENCH_JSON, suite="cpu-scaled",
                             total_s=round(total, 1))

@@ -123,12 +123,16 @@ _INSTR = re.compile(
 
 
 def _split_operands(s: str) -> List[str]:
+    # Newer HLO dumps print typed operands — ``dot(f32[32,128]{1,0}
+    # %Arg_0.1, ...)`` — whose shape strings contain commas, so the operand
+    # names must be pulled out by the %-sigil, not by comma splitting.
+    sigiled = re.findall(r"%([\w.\-]+)", s)
+    if sigiled:
+        return sigiled
     out = []
     for part in s.split(","):
         part = part.strip()
-        if part.startswith("%"):
-            out.append(part[1:])
-        elif re.fullmatch(r"[\w.\-]+", part):
+        if re.fullmatch(r"[\w.\-]+", part):
             out.append(part)
     return out
 

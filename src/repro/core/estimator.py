@@ -35,6 +35,8 @@ class EstimatorConfig:
     score_h: Optional[float] = None  # score-estimation bandwidth (None = h)
     dtype: jnp.dtype = jnp.float32
     precision: str = "f32"       # Pallas GEMM-operand tier (kernels/precision)
+    prune: "str | float" = "auto"  # cluster pruning (kernels/spatial):
+    #                              # "auto" | "off" | certified epsilon >= 0
 
 
 class KDE:
@@ -65,7 +67,7 @@ class KDE:
             return ops.flash_kde(
                 x, y, self.h, precision=cfg.precision,
                 block_m=cfg.block_m, block_n=cfg.block_n,
-                interpret=cfg.interpret,
+                interpret=cfg.interpret, prune=cfg.prune,
             )
         if cfg.backend == "ring":
             from repro.distributed import ring
@@ -99,7 +101,7 @@ class SDKDE(KDE):
                 self.x_train, self.h, score_h=cfg.score_h,
                 precision=cfg.precision,
                 block_m=cfg.block_m, block_n=cfg.block_n,
-                interpret=cfg.interpret,
+                interpret=cfg.interpret, prune=cfg.prune,
             )
         elif cfg.backend == "ring":
             from repro.distributed import ring
@@ -137,7 +139,7 @@ class LaplaceKDE(KDE):
                 return ops.flash_laplace_kde(
                     x, y, self.h, precision=cfg.precision,
                     block_m=cfg.block_m, block_n=cfg.block_n,
-                    interpret=cfg.interpret,
+                    interpret=cfg.interpret, prune=cfg.prune,
                 )
             return ops.laplace_kde_nonfused(
                 x, y, self.h, precision=cfg.precision,

@@ -16,8 +16,11 @@ from jax import lax
 
 if hasattr(jax, "shard_map"):
 
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  axis_names=None):
         kw = {} if check_vma is None else {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
         return jax.shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
         )
@@ -25,13 +28,19 @@ if hasattr(jax, "shard_map"):
 else:  # jax <= 0.4.x
     from jax.experimental.shard_map import shard_map as _exp_shard_map
 
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  axis_names=None):
         # check_rep=False: the ring carries are device-varying by
         # construction; the old replication checker can't see that.
         del check_vma  # the old tracer has no vma concept
+        kw = {}
+        if axis_names is not None:
+            # the old API spells partial-manual as the complement: ``auto``
+            # = the axes NOT listed as manual.
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
         return _exp_shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
+            check_rep=False, **kw,
         )
 
 
@@ -42,4 +51,42 @@ else:  # jax <= 0.4.x: no varying-axes tracking, nothing to mark
         return x
 
 
-__all__ = ["shard_map", "pvary"]
+if hasattr(lax, "pvary"):  # modern jax: barrier has a differentiation rule
+    optimization_barrier = lax.optimization_barrier
+else:
+    # 0.4.x lacks the JVP rule for optimization_barrier, which breaks any
+    # grad through it.  The barrier is a scheduling hint (it pins a gather
+    # below a convert on TPU), not semantics — dropping it on the old-jax
+    # CPU validation path changes nothing numerically.
+    def optimization_barrier(x):
+        return x
+
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:  # jax <= 0.4.x: psum of 1 constant-folds to the (static) axis size
+    def axis_size(name):
+        return lax.psum(1, name)
+
+
+try:  # jax >= 0.5: explicit axis types on meshes
+    from jax.sharding import AxisType
+except ImportError:  # jax <= 0.4.x: every axis is implicitly Auto
+    AxisType = None
+
+
+def make_auto_mesh(shape, axes, devices=None):
+    """``jax.make_mesh`` with every axis marked Auto, on any jax version.
+
+    Newer jax wants ``axis_types=(AxisType.Auto, ...)`` spelled out (and
+    hidden-sharding APIs check it); 0.4.x has no axis-type concept — its
+    meshes already behave as Auto — and rejects the kwarg.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    if AxisType is not None:
+        kw["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
+
+
+__all__ = ["shard_map", "pvary", "axis_size", "optimization_barrier",
+           "AxisType", "make_auto_mesh"]

@@ -82,6 +82,7 @@ def modeled_cost(
     rows: int, cols: int, d: int, *, block_m: int, block_n: int,
     out_width: int = 1, precision: str = "f32",
     vmem_itemsize: Optional[int] = None,
+    occupancy: float = 1.0,
 ) -> Optional[TunedConfig]:
     """Precision-derated, padding-aware cost; None if over the VMEM budget.
 
@@ -90,17 +91,28 @@ def modeled_cost(
     serving registry passes 4 so a tile tuned at the bf16 tier stays
     feasible when a per-request override later serves f32/bf16x2 traffic
     through the same prepared layout.
+
+    ``occupancy`` is the expected fraction of column tiles each row block
+    actually visits under cluster pruning (kernels/spatial.py): the
+    streamed-tile HBM traffic, the pairwise MXU/VPU work and the grid-step
+    overhead all scale with it, so the tile sweep can trade tile size
+    against skip granularity.  1.0 models the dense pass.
     """
     prec.validate(precision)
     pr, pc = _pad_up(rows, block_m), _pad_up(cols, block_n)
+    # A pruned pass streams ceil(occupancy · n_tiles) column tiles per row
+    # block — identical cost structure to a dense pass over that many
+    # columns (the row-tile and writeback terms don't shrink).
+    visits = max(1, math.ceil(occupancy * (pc // block_n)))
+    pc_eff = visits * block_n
     c = tuning.pair_pass_cost(
-        pr, pc, d, block_m=block_m, block_n=block_n, out_width=out_width,
+        pr, pc_eff, d, block_m=block_m, block_n=block_n, out_width=out_width,
         itemsize=prec.operand_bytes(precision),
     )
     vmem = c.vmem_bytes
     if vmem_itemsize is not None:
         vmem = tuning.pair_pass_cost(
-            pr, pc, d, block_m=block_m, block_n=block_n,
+            pr, pc_eff, d, block_m=block_m, block_n=block_n,
             out_width=out_width, itemsize=vmem_itemsize,
         ).vmem_bytes
     if vmem > tuning.VMEM_BUDGET:
@@ -108,7 +120,7 @@ def modeled_cost(
     t_mxu = (c.mxu_flops * prec.gram_products(precision)
              / (tuning.MXU_FLOPS * MXU_DERATE[precision]))
     terms = {"hbm": c.t_hbm, "mxu": t_mxu, "vpu": c.t_vpu}
-    grid_steps = (pr // block_m) * (pc // block_n)
+    grid_steps = (pr // block_m) * visits
     return TunedConfig(
         block_m, block_n,
         max(terms.values()) + grid_steps * STEP_OVERHEAD_S,
@@ -123,14 +135,23 @@ def shortlist(
     block_ms: Sequence[int] = DEFAULT_BLOCK_MS,
     block_ns: Sequence[int] = DEFAULT_BLOCK_NS,
     vmem_itemsize: Optional[int] = None,
+    occupancy: float = 1.0,
+    occupancy_fn: Optional[Callable[[int], float]] = None,
 ) -> List[TunedConfig]:
-    """All feasible candidates, best modeled step time first."""
+    """All feasible candidates, best modeled step time first.
+
+    ``occupancy_fn`` maps a candidate ``block_n`` to its expected
+    occupancy (tile-width-dependent — see ``expected_occupancy``); when
+    given it overrides the flat ``occupancy``.
+    """
     cands = []
     for bm in block_ms:
         for bn in block_ns:
+            occ = occupancy_fn(bn) if occupancy_fn is not None else occupancy
             c = modeled_cost(rows, cols, d, block_m=bm, block_n=bn,
                              out_width=out_width, precision=precision,
-                             vmem_itemsize=vmem_itemsize)
+                             vmem_itemsize=vmem_itemsize,
+                             occupancy=occ)
             if c is not None:
                 cands.append(c)
     return sorted(cands, key=lambda c: c.step_time)
@@ -141,12 +162,21 @@ def shortlist(
 # ---------------------------------------------------------------------------
 
 _CACHE: Dict[tuple, Tuple[int, int]] = {}
+_OCCUPANCY: Dict[tuple, Dict[int, float]] = {}
 _LOCK = threading.Lock()
+
+#: Reference column-tile width the pruned wrappers probe occupancy at (in
+#: addition to their launch width).  A fine-granularity record is what lets
+#: ``expected_occupancy`` extrapolate to ANY candidate tile, so the tuner
+#: can discover that smaller tiles prune better even when the first launch
+#: ran at a dense-optimal (huge) tile.
+FINE_PROBE_BLOCK = 128
 
 
 def clear_cache() -> None:
     with _LOCK:
         _CACHE.clear()
+        _OCCUPANCY.clear()
 
 
 def cache_info() -> Dict[tuple, Tuple[int, int]]:
@@ -157,6 +187,59 @@ def cache_info() -> Dict[tuple, Tuple[int, int]]:
 def _shape_bucket(x: int) -> int:
     """Next power of two ≥ x: the cache key granularity for rows/cols."""
     return 1 << max(int(math.ceil(math.log2(max(x, 1)))), 0)
+
+
+def record_occupancy(rows: int, cols: int, d: int, occupancy: float,
+                     block_n: int, alpha: float = 0.5) -> None:
+    """Feed one measured tile-map occupancy back into the tuner.
+
+    The pruned wrappers call this after every bounds prepass — once at the
+    launch ``block_n`` and once at ``FINE_PROBE_BLOCK`` — keeping an EMA
+    per (padded-shape bucket, block_n).  ``resolve_blocks(pruned=True)``
+    consults the profile on the *next* resolve for that regime, so
+    tile-shape choice learns the workload's actual skip rate instead of
+    assuming a dense pass.
+    """
+    key = (_shape_bucket(rows), _shape_bucket(cols), d)
+    occupancy = min(max(float(occupancy), 0.0), 1.0)
+    with _LOCK:
+        prof = _OCCUPANCY.setdefault(key, {})
+        old = prof.get(block_n)
+        prof[block_n] = occupancy if old is None else (
+            (1.0 - alpha) * old + alpha * occupancy
+        )
+
+
+def has_occupancy(rows: int, cols: int, d: int, block_n: int) -> bool:
+    """Whether a measured occupancy exists for this regime and tile width."""
+    key = (_shape_bucket(rows), _shape_bucket(cols), d)
+    with _LOCK:
+        return block_n in _OCCUPANCY.get(key, {})
+
+
+def expected_occupancy(rows: int, cols: int, d: int,
+                       block_n: Optional[int] = None,
+                       default: float = 1.0) -> float:
+    """The learned occupancy for a shape regime (``default`` when unseen).
+
+    Occupancy depends on tile width: a column tile wider than a cluster
+    can never be skipped, so the keep fraction grows roughly linearly with
+    tile span until it saturates.  A query at an unrecorded ``block_n``
+    extrapolates linearly from the nearest recorded width below it (the
+    fine probe, usually), capped at 1.
+    """
+    key = (_shape_bucket(rows), _shape_bucket(cols), d)
+    with _LOCK:
+        prof = dict(_OCCUPANCY.get(key, {}))
+    if not prof:
+        return default
+    if block_n is None:
+        return min(prof.values())
+    if block_n in prof:
+        return prof[block_n]
+    below = [b for b in prof if b < block_n]
+    ref = max(below) if below else min(prof)
+    return min(1.0, prof[ref] * block_n / ref)
 
 
 def _probe_time_fn(rows: int, cols: int, d: int, out_width: int,
@@ -178,13 +261,18 @@ def _probe_time_fn(rows: int, cols: int, d: int, out_width: int,
     y = jax.random.normal(ky, (rows, d), jnp.float32)
 
     def time_blocks(bm: int, bn: int) -> float:
+        # prune="off": the probe times the DENSE kernel on synthetic
+        # gaussian data — letting it prune would both time the wrong
+        # pipeline and pollute the workload's learned occupancy profile
         if out_width > 1:
             fn = lambda: ops.flash_score_stats(  # noqa: E731
                 x, 1.0, precision=precision, block_m=bm, block_n=bn,
+                prune="off",
             )
         else:
             fn = lambda: ops.flash_kde(  # noqa: E731
                 x, y, 1.0, precision=precision, block_m=bm, block_n=bn,
+                prune="off",
             )
         jax.block_until_ready(fn())          # compile outside timing
         best = float("inf")
@@ -206,6 +294,9 @@ def autotune_blocks(
     time_fn: Optional[Callable[[int, int], float]] = None,
     topk: int = 3,
     vmem_itemsize: Optional[int] = None,
+    occupancy: float = 1.0,
+    occupancy_fn: Optional[Callable[[int], float]] = None,
+    occupancy_key: tuple = (),
 ) -> Tuple[int, int]:
     """The tuned (block_m, block_n) for one streaming pairwise pass.
 
@@ -218,14 +309,16 @@ def autotune_blocks(
     """
     prec.validate(precision)
     key = (_shape_bucket(rows), _shape_bucket(cols), d, out_width, precision,
-           tuple(block_ms), tuple(block_ns), vmem_itemsize)
+           tuple(block_ms), tuple(block_ns), vmem_itemsize,
+           round(occupancy, 2), occupancy_key)
     with _LOCK:
         if key in _CACHE:
             return _CACHE[key]
 
     cands = shortlist(rows, cols, d, out_width=out_width,
                       precision=precision, block_ms=block_ms,
-                      block_ns=block_ns, vmem_itemsize=vmem_itemsize)
+                      block_ns=block_ns, vmem_itemsize=vmem_itemsize,
+                      occupancy=occupancy, occupancy_fn=occupancy_fn)
     if not cands:
         raise ValueError(
             f"no feasible launch config for rows={rows} cols={cols} d={d} "
@@ -253,6 +346,7 @@ def resolve_blocks(
     col_multiple: Optional[int] = None,
     measure: Optional[bool] = None,
     vmem_itemsize: Optional[int] = None,
+    pruned: bool = False,
 ) -> Tuple[int, int]:
     """Turn ``"auto"`` block args into tuned ints (ints pass through).
 
@@ -262,6 +356,8 @@ def resolve_blocks(
     a shape bucket — the tile sweep must respect those layouts).
     ``vmem_itemsize`` widens the VMEM feasibility gate (see modeled_cost)
     for callers that will reuse the tile across precision tiers.
+    ``pruned`` costs candidates at the learned expected occupancy for this
+    shape regime (``record_occupancy``) instead of a dense pass.
     """
     m_auto, n_auto = block_m == "auto", block_n == "auto"
     if not m_auto and not n_auto:
@@ -278,15 +374,27 @@ def resolve_blocks(
         else (block_m,)
     block_ns = _fitting(DEFAULT_BLOCK_NS, col_multiple) if n_auto \
         else (block_n,)
+    occ_fn = None
+    occ_key: tuple = ()
+    if pruned:
+        occ_fn = lambda bn: expected_occupancy(rows, cols, d, bn)  # noqa: E731
+        key = (_shape_bucket(rows), _shape_bucket(cols), d)
+        with _LOCK:
+            prof = _OCCUPANCY.get(key, {})
+            occ_key = tuple(sorted(
+                (bn, round(o, 3)) for bn, o in prof.items()
+            ))
     return autotune_blocks(
         rows, cols, d, out_width=out_width, precision=precision,
         block_ms=block_ms, block_ns=block_ns, measure=measure,
-        vmem_itemsize=vmem_itemsize,
+        vmem_itemsize=vmem_itemsize, occupancy_fn=occ_fn,
+        occupancy_key=occ_key,
     )
 
 
 __all__ = [
     "DEFAULT_BLOCK_MS", "DEFAULT_BLOCK_NS", "MXU_DERATE", "TunedConfig",
-    "modeled_cost", "shortlist", "autotune_blocks", "resolve_blocks",
-    "clear_cache", "cache_info",
+    "FINE_PROBE_BLOCK", "modeled_cost", "shortlist", "autotune_blocks",
+    "resolve_blocks", "clear_cache", "cache_info", "record_occupancy",
+    "expected_occupancy", "has_occupancy",
 ]

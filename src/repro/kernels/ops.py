@@ -1,4 +1,4 @@
-"""Public jit'd wrappers around the Flash-SD-KDE Pallas kernels.
+"""Public wrappers around the Flash-SD-KDE Pallas kernels.
 
 Responsibilities: pad point sets to tile multiples (with far-away sentinel
 points whose kernel weight underflows to exactly 0.0, so padding never
@@ -6,7 +6,7 @@ changes a result), precompute squared norms and transposed layouts (lane
 axis = the streamed column dimension, which is what the TPU wants), budget
 VMEM, launch the kernels, slice off padding and normalize.
 
-Two launch knobs thread through every wrapper here:
+Three launch knobs thread through every wrapper here:
 
   * ``precision`` — the GEMM-operand tier (``"f32"`` / ``"bf16"`` /
     ``"bf16x2"``, kernels/precision.py).  Norms, distances, exponentials and
@@ -15,6 +15,13 @@ Two launch knobs thread through every wrapper here:
     ``"auto"`` (the default), which consults the model-guided autotuner
     (kernels/autotune.py): cost-model shortlist on the padded problem,
     optional on-device timing, memoized winners.
+  * ``prune`` — cluster pruning (kernels/spatial.py): ``"off"`` streams
+    every tile pair (dense), a float ``epsilon ≥ 0`` reorders the train set
+    spatially and skips column tiles whose certified per-point contribution
+    is ≤ epsilon (``0.0`` = only tiles whose every term underflows to
+    exactly 0.0 in f32 — the dense result, cheaper), and ``"auto"`` (the
+    default) applies exact (epsilon=0) pruning once the streamed set is
+    large enough to pay for the bounds prepass.
 
 Every function here has a pure-jnp oracle in ``ref.py`` and an allclose
 sweep in ``tests/``.
@@ -24,13 +31,15 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import NamedTuple, Optional
+import threading
+import weakref
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bandwidth import gaussian_norm_const
-from repro.kernels import autotune
+from repro.kernels import autotune, flash_pruned, spatial
 from repro.kernels import precision as prec
 from repro.kernels.flash_kde import flash_kde_pallas
 from repro.kernels.flash_laplace import flash_laplace_pallas, sq_moment_pallas
@@ -41,6 +50,72 @@ PAD_VALUE = 1.0e6
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
 _STATIC = ("precision", "block_m", "block_n", "interpret")
+
+PruneArg = Union[str, float]  # "auto" | "off" | epsilon ≥ 0
+
+#: ``prune="auto"`` enables exact pruning only past these sizes — below
+#: them the bounds prepass and host-side visit-list compaction cost more
+#: than the skipped tiles were worth.
+PRUNE_AUTO_MIN_COLS = 16384
+PRUNE_AUTO_MIN_TILES = 4
+
+
+def resolve_prune(prune: PruneArg, cols: int, block_n: int) -> Optional[float]:
+    """The per-point epsilon a prune argument means; None = dense."""
+    if prune is None or prune is False or prune == "off":
+        return None
+    if prune == "auto":
+        if (cols >= PRUNE_AUTO_MIN_COLS
+                and cols >= PRUNE_AUTO_MIN_TILES * block_n):
+            return 0.0
+        return None
+    if isinstance(prune, str):
+        raise ValueError(
+            f"bad prune argument {prune!r} (choose 'auto', 'off', or a "
+            "float epsilon >= 0)"
+        )
+    eps = float(prune)
+    if not eps >= 0.0:
+        raise ValueError(f"prune epsilon must be >= 0, got {eps}")
+    return eps
+
+
+def _traced(*arrays) -> bool:
+    """True when any argument is an abstract tracer (jit/vmap/grad).
+
+    The pruned path host-syncs (visit-list compaction, layout shapes), so
+    under tracing the public wrappers silently fall back to dense — the
+    pre-pruning behavior, and the only one that can stay a single jaxpr.
+    """
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+# One-shot wrappers amortize the spatial prep across repeated calls on the
+# SAME train array (e.g. core.estimator evaluate loops): keyed by array
+# identity, guarded by a weakref so a recycled id can never alias, holding
+# at most a handful of live entries.
+_COLUMNS_CACHE: dict = {}
+_COLUMNS_LOCK = threading.Lock()
+
+
+def _cached_columns(x, *, block_n: int, precision: str,
+                    seed: int) -> "TrainColumns":
+    key = (id(x), int(block_n), precision, seed)
+    with _COLUMNS_LOCK:
+        hit = _COLUMNS_CACHE.get(key)
+        if hit is not None and hit[0]() is x:
+            return hit[1]
+    cols = prepare_train_columns(x, block_n=block_n, precision=precision,
+                                 clustered=True, seed=seed)
+    try:
+        ref = weakref.ref(x)
+    except TypeError:            # not weakref-able: skip caching
+        return cols
+    with _COLUMNS_LOCK:
+        for k in [k for k, (r, _) in _COLUMNS_CACHE.items() if r() is None]:
+            del _COLUMNS_CACHE[k]
+        _COLUMNS_CACHE[key] = (ref, cols)
+    return cols
 
 
 def _pad_to(x: jnp.ndarray, mult: int, value: float = PAD_VALUE) -> jnp.ndarray:
@@ -75,30 +150,35 @@ def _inv2h2(h) -> jnp.ndarray:
 
 
 def vmem_tile_bytes(block_m: int, block_n: int, d: int,
-                    itemsize: int = 4) -> int:
+                    itemsize: int = 4, out_width: Optional[int] = None) -> int:
     """Per-step VMEM working set (inputs + φ tile + output accumulator).
 
     ``itemsize`` is the GEMM-operand byte width (4 f32, 2 bf16, 4 for the
     two-plane bf16x2 split — ``precision.operand_bytes``); norms, the φ
-    tile, and the accumulator are always f32.
+    tile, and the accumulator are always f32.  ``out_width`` is the
+    accumulator width: the (block_n, d+1) xaug operand tile exists only on
+    the score path (out_width = d+1); the KDE/Laplace paths (out_width = 1)
+    carry neither it nor a (d+1)-wide accumulator.  None keeps the legacy
+    conservative budget (score-shaped).
     """
+    ow = out_width if out_width is not None else d + 1
     operand_elems = (
         block_m * d            # row tile
         + d * block_n          # xt column tile
-        + block_n * (d + 1)    # xaug column tile
+        + (block_n * (d + 1) if ow > 1 else 0)   # xaug column tile (score)
     )
     f32_elems = (
         block_m                # row norms
         + block_n              # column norms
         + block_m * block_n    # φ tile (registers/VMEM intermediate)
-        + block_m * (d + 1)    # accumulator
+        + block_m * ow         # accumulator
     )
     return operand_elems * itemsize + f32_elems * 4
 
 
 def _check_vmem(block_m: int, block_n: int, d: int,
-                itemsize: int = 4) -> None:
-    b = vmem_tile_bytes(block_m, block_n, d, itemsize)
+                itemsize: int = 4, out_width: Optional[int] = None) -> None:
+    b = vmem_tile_bytes(block_m, block_n, d, itemsize, out_width)
     if b > VMEM_BUDGET_BYTES:
         raise ValueError(
             f"tile working set {b/2**20:.1f} MiB exceeds VMEM budget "
@@ -108,15 +188,17 @@ def _check_vmem(block_m: int, block_n: int, d: int,
 
 
 def _resolve(block_m, block_n, rows, cols, d, *, out_width, precision,
-             interpret, row_multiple=None, col_multiple=None):
+             interpret, row_multiple=None, col_multiple=None, pruned=False):
     """Shared "auto"-tile resolution + dtype-aware VMEM gate."""
     block_m, block_n = autotune.resolve_blocks(
         block_m, block_n, rows, cols, d, out_width=out_width,
         precision=precision, row_multiple=row_multiple,
         col_multiple=col_multiple,
         measure=False if interpret else None,
+        pruned=pruned,
     )
-    _check_vmem(block_m, block_n, d, prec.operand_bytes(precision))
+    _check_vmem(block_m, block_n, d, prec.operand_bytes(precision),
+                out_width=out_width)
     return block_m, block_n
 
 
@@ -125,39 +207,37 @@ def _resolve(block_m, block_n, rows, cols, d, *, out_width, precision,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
-def flash_score_stats(
-    x: jnp.ndarray,
-    h,
-    *,
-    precision: str = "f32",
-    block_m="auto",
-    block_n="auto",
-    interpret: bool = False,
-):
-    """(S0, S1) score statistics over the train set via the fused kernel."""
-    prec.validate(precision)
-    n, d = x.shape
-    block_m, block_n = _resolve(
-        block_m, block_n, n, n, d, out_width=d + 1, precision=precision,
-        interpret=interpret,
-    )
-    mult = math.lcm(block_m, block_n)
-    xp = _pad_to(x, mult)
+def _score_operands(xp: jnp.ndarray, precision: str):
+    """(x_ops, xt_ops, xaug_ops, nrm, xrec) for a padded train set."""
     npad = xp.shape[0]
-    xaug = jnp.concatenate(
-        [xp, jnp.ones((npad, 1), xp.dtype)], axis=1
-    )
+    xaug = jnp.concatenate([xp, jnp.ones((npad, 1), xp.dtype)], axis=1)
     if precision == "f32":
         x_ops = (xp, None)
         xt_ops = (xp.astype(jnp.float32).T.astype(xp.dtype), None)
         xaug_ops = (xaug, None)
-        nrm = _norms(xp)
+        xrec = xp.astype(jnp.float32)
     else:
         x_ops = prec.cast_operand(xp.astype(jnp.float32), precision)
         xt_ops = (x_ops[0].T, None if x_ops[1] is None else x_ops[1].T)
         xaug_ops = prec.cast_operand(xaug.astype(jnp.float32), precision)
-        nrm = _tier_norms(*x_ops)
+        xrec = prec.reconstruct(*x_ops)
+    return x_ops, xt_ops, xaug_ops, _norms(xrec), xrec
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC)
+def _flash_score_stats_dense(
+    x: jnp.ndarray,
+    h,
+    *,
+    precision: str = "f32",
+    block_m=128,
+    block_n=512,
+    interpret: bool = False,
+):
+    n, d = x.shape
+    mult = math.lcm(block_m, block_n)
+    xp = _pad_to(x, mult)
+    x_ops, xt_ops, xaug_ops, nrm, _ = _score_operands(xp, precision)
     s1aug = flash_score_pallas(
         x_ops[0], nrm, xt_ops[0], xaug_ops[0], _inv2h2(h),
         x_ops[1], xt_ops[1], xaug_ops[1],
@@ -168,7 +248,124 @@ def flash_score_stats(
     return s0, s1
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
+def _record_occupancy_profile(rows, col_counts, d, launch_occ, block_n,
+                              yrec, meta_fine, inv2h2, epsilon, block_m,
+                              kind):
+    """Feed the tuner's occupancy profile after one bounds prepass.
+
+    The launch-width occupancy is recorded under every column-count key a
+    later resolve may use (true train count and padded layout length).
+    The fine-width probe — a second bounds pass at FINE_PROBE_BLOCK,
+    ~block_n/128× the prepass cost — runs only until the profile has a
+    fine record for this regime: after that the EMA has nothing new to
+    learn and the hot query path skips it.
+    """
+    fine = autotune.FINE_PROBE_BLOCK
+    for n_key in col_counts:
+        autotune.record_occupancy(rows, n_key, d, launch_occ,
+                                  block_n=block_n)
+    if meta_fine is None or all(
+        autotune.has_occupancy(rows, k, d, fine) for k in col_counts
+    ):
+        return
+    fine_tm = spatial.tile_map(yrec, meta_fine, inv2h2, epsilon,
+                               block_m=block_m, kind=kind)
+    fine_occ = float(jnp.mean(fine_tm.keep))
+    for n_key in col_counts:
+        autotune.record_occupancy(rows, n_key, d, fine_occ, block_n=fine)
+
+
+def _score_stats_pruned(
+    x: jnp.ndarray,
+    h,
+    epsilon: float,
+    index: spatial.SpatialIndex,
+    *,
+    precision: str,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+):
+    """Pruned score pass; returns (S0, S1) in ``x``'s original row order.
+
+    The score pass is train×train, so the cluster-aligned layout serves
+    both axes: row tiles and column tiles of the same padded scatter, and
+    the output rows come straight back through the layout's slot map.  The
+    certificate uses the score kind — per-point bound exp(-arg)·max(1,
+    max|x|) — because the accumulator weights are the [X | 1] columns.
+    """
+    n, d = x.shape
+    layout = spatial.cluster_layout(
+        jnp.asarray(x, jnp.float32), index.labels, block_n,
+        total_multiple=math.lcm(block_m, block_n),
+    )
+    xp = layout.points
+    x_ops, xt_ops, xaug_ops, nrm, xrec = _score_operands(xp, precision)
+    col_meta = spatial.tile_metadata(xrec, layout.real, block=block_n)
+    tm = spatial.tile_map(xrec, col_meta, _inv2h2(h), epsilon,
+                          block_m=block_m, kind="score")
+    vl = spatial.visit_lists(tm.keep)
+    fine_meta = None
+    if block_n > autotune.FINE_PROBE_BLOCK \
+            and xp.shape[0] % autotune.FINE_PROBE_BLOCK == 0 \
+            and not autotune.has_occupancy(n, n, d,
+                                           autotune.FINE_PROBE_BLOCK):
+        fine_meta = spatial.tile_metadata(xrec, layout.real,
+                                          block=autotune.FINE_PROBE_BLOCK)
+    _record_occupancy_profile(n, {n}, d, vl.occupancy, block_n, xrec,
+                              fine_meta, _inv2h2(h), epsilon, block_m,
+                              "score")
+    s1aug = flash_pruned.flash_score_pallas_pruned(
+        vl.counts, vl.tile_map, x_ops[0], nrm, xt_ops[0], xaug_ops[0],
+        _inv2h2(h), x_ops[1], xt_ops[1], xaug_ops[1],
+        block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
+        interpret=interpret,
+    )
+    rows = s1aug[layout.slots]
+    return rows[:, d], rows[:, :d]
+
+
+def flash_score_stats(
+    x: jnp.ndarray,
+    h,
+    *,
+    precision: str = "f32",
+    block_m="auto",
+    block_n="auto",
+    interpret: bool = False,
+    prune: PruneArg = "auto",
+    seed: int = 0,
+):
+    """(S0, S1) score statistics over the train set via the fused kernel."""
+    prec.validate(precision)
+    if _traced(x):
+        prune = "off"            # pruning host-syncs; stay traceable
+    n, d = x.shape
+    block_m, block_n = _resolve(
+        block_m, block_n, n, n, d, out_width=d + 1, precision=precision,
+        interpret=interpret, pruned=prune != "off",
+    )
+    eps = resolve_prune(prune, n, block_n)
+    if eps is None:
+        return _flash_score_stats_dense(
+            x, h, precision=precision, block_m=block_m, block_n=block_n,
+            interpret=interpret,
+        )
+    index = spatial.build_index(x, seed=seed)
+    return _score_stats_pruned(
+        x, h, eps, index, precision=precision, block_m=block_m,
+        block_n=block_n, interpret=interpret,
+    )
+
+
+def _apply_score_shift(x32: jnp.ndarray, s0, s1, h, sh) -> jnp.ndarray:
+    """x^SD = x + (h²/2)·ŝ(x) from the fused statistics (rows aligned)."""
+    sh = jnp.asarray(sh, jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    score = (s1 - x32 * s0[:, None]) / (sh * sh * s0[:, None])
+    return x32 + 0.5 * h * h * score
+
+
 def flash_sdkde_shift(
     x: jnp.ndarray,
     h,
@@ -178,18 +375,17 @@ def flash_sdkde_shift(
     block_m="auto",
     block_n="auto",
     interpret: bool = False,
+    prune: PruneArg = "auto",
+    seed: int = 0,
 ) -> jnp.ndarray:
     """Debiased samples x^SD = x + (h²/2)·ŝ(x), score via the flash kernel."""
     sh = h if score_h is None else score_h
     s0, s1 = flash_score_stats(
         x, sh, precision=precision,
         block_m=block_m, block_n=block_n, interpret=interpret,
+        prune=prune, seed=seed,
     )
-    sh = jnp.asarray(sh, jnp.float32)
-    h = jnp.asarray(h, jnp.float32)
-    x32 = x.astype(jnp.float32)
-    score = (s1 - x32 * s0[:, None]) / (sh * sh * s0[:, None])
-    return x32 + 0.5 * h * h * score
+    return _apply_score_shift(x.astype(jnp.float32), s0, s1, h, sh)
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +413,32 @@ def _prep_eval(x, y, block_m, block_n, precision):
     return y_ops, xt_ops, nrm_y, nrm_x
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
+@functools.partial(jax.jit, static_argnames=_STATIC + ("laplace",))
+def _flash_eval_dense(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    h,
+    *,
+    precision: str = "f32",
+    block_m=128,
+    block_n=512,
+    interpret: bool = False,
+    laplace: bool = False,
+) -> jnp.ndarray:
+    """Dense KDE / fused-Laplace evaluation (normalized densities)."""
+    n, d = x.shape
+    m = y.shape[0]
+    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
+                                             precision)
+    kernel = flash_laplace_pallas if laplace else flash_kde_pallas
+    sums = kernel(
+        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    h = jnp.asarray(h, jnp.float32)
+    return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+
+
 def flash_kde(
     x: jnp.ndarray,
     y: jnp.ndarray,
@@ -227,26 +448,35 @@ def flash_kde(
     block_m="auto",
     block_n="auto",
     interpret: bool = False,
+    prune: PruneArg = "auto",
+    seed: int = 0,
 ) -> jnp.ndarray:
     """Normalized Gaussian KDE densities at ``y`` (train set ``x``)."""
     prec.validate(precision)
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
     n, d = x.shape
     m = y.shape[0]
     block_m, block_n = _resolve(
         block_m, block_n, m, n, d, out_width=1, precision=precision,
-        interpret=interpret,
+        interpret=interpret, pruned=prune != "off",
     )
-    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
-                                             precision)
-    sums = flash_kde_pallas(
-        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
-        block_m=block_m, block_n=block_n, interpret=interpret,
+    eps = resolve_prune(prune, n, block_n)
+    if eps is None:
+        return _flash_eval_dense(
+            x, y, h, precision=precision, block_m=block_m, block_n=block_n,
+            interpret=interpret, laplace=False,
+        )
+    cols = _cached_columns(x, block_n=block_n, precision=precision,
+                           seed=seed)
+    sums = _pruned_eval_sums(
+        y, cols, h, eps, precision=precision, block_m=block_m,
+        block_n=block_n, interpret=interpret, laplace=False,
     )
     h = jnp.asarray(h, jnp.float32)
-    return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+    return sums / (n * gaussian_norm_const(d, 1.0) * h**d)
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_laplace_kde(
     x: jnp.ndarray,
     y: jnp.ndarray,
@@ -256,23 +486,33 @@ def flash_laplace_kde(
     block_m="auto",
     block_n="auto",
     interpret: bool = False,
+    prune: PruneArg = "auto",
+    seed: int = 0,
 ) -> jnp.ndarray:
     """Fused Flash-Laplace-KDE densities at ``y`` — single quadratic pass."""
     prec.validate(precision)
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
     n, d = x.shape
     m = y.shape[0]
     block_m, block_n = _resolve(
         block_m, block_n, m, n, d, out_width=1, precision=precision,
-        interpret=interpret,
+        interpret=interpret, pruned=prune != "off",
     )
-    y_ops, xt_ops, nrm_y, nrm_x = _prep_eval(x, y, block_m, block_n,
-                                             precision)
-    sums = flash_laplace_pallas(
-        y_ops[0], nrm_y, xt_ops[0], nrm_x, _inv2h2(h), y_ops[1], xt_ops[1],
-        block_m=block_m, block_n=block_n, interpret=interpret,
+    eps = resolve_prune(prune, n, block_n)
+    if eps is None:
+        return _flash_eval_dense(
+            x, y, h, precision=precision, block_m=block_m, block_n=block_n,
+            interpret=interpret, laplace=True,
+        )
+    cols = _cached_columns(x, block_n=block_n, precision=precision,
+                           seed=seed)
+    sums = _pruned_eval_sums(
+        y, cols, h, eps, precision=precision, block_m=block_m,
+        block_n=block_n, interpret=interpret, laplace=True,
     )
     h = jnp.asarray(h, jnp.float32)
-    return sums[:m, 0] / (n * gaussian_norm_const(d, 1.0) * h**d)
+    return sums / (n * gaussian_norm_const(d, 1.0) * h**d)
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC)
@@ -286,7 +526,11 @@ def laplace_kde_nonfused(
     block_n="auto",
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """Non-fused Laplace baseline: two quadratic kernel launches (Fig. 4)."""
+    """Non-fused Laplace baseline: two quadratic kernel launches (Fig. 4).
+
+    Stays dense on purpose — it exists as the measured baseline for the
+    fusion (and now pruning) speedups.
+    """
     prec.validate(precision)
     n, d = x.shape
     m = y.shape[0]
@@ -320,18 +564,42 @@ class TrainColumns(NamedTuple):
     xt: jnp.ndarray                 # (d, n_padded) tier-cast hi plane
     xt_lo: Optional[jnp.ndarray]    # (d, n_padded) bf16 lo plane (bf16x2)
     nrm_x: jnp.ndarray              # (1, n_padded) f32 column norms
+    # Cluster-pruning state (None on non-spatial prepares): per-column-tile
+    # geometry certified against the tier-cast points, and the spatial
+    # index whose centroids order incoming query batches.  ``meta_fine``
+    # is the same geometry at the tuner's fine probe width — the pruned
+    # wrappers measure occupancy there too, so the autotuner can
+    # extrapolate skip rates to tile widths it has never launched.
+    meta: Optional[spatial.TileMeta] = None
+    index: Optional[spatial.SpatialIndex] = None
+    meta_fine: Optional[spatial.TileMeta] = None
+    block_n: int = 0                # prepare-time column-tile width
 
 
-def prepare_train_columns(x: jnp.ndarray, *, block_n: int = 512,
-                          precision: str = "f32") -> TrainColumns:
+def prepare_train_columns(
+    x: jnp.ndarray,
+    *,
+    block_n: "int | str" = 512,
+    precision: str = "f32",
+    clustered: bool = False,
+    index: Optional[spatial.SpatialIndex] = None,
+    seed: int = 0,
+) -> TrainColumns:
     """One-time train-side prep for repeated evaluation against the same set.
 
     Pads the (debiased) train set to a ``block_n`` multiple with sentinel
     points, builds the transposed (d, n) layout the kernels stream as lane-
     major column tiles (cast to the requested precision tier — for bf16x2
     both hi and lo planes), and precomputes the f32 column squared norms.
-    The serving registry caches the result per tier so none of this work is
-    repeated per query batch.
+    ``block_n`` may be ``"auto"`` (autotuned for a serving-scale row count).
+
+    ``clustered=True`` instead scatters the points into the cluster-aligned
+    sentinel-padded layout (k-means by default; pass ``index`` to reuse an
+    existing clustering — its per-row labels apply directly when fitted on
+    a row-aligned set, e.g. the pre-shift points) and attaches the per-tile
+    metadata the pruned kernels' bounds prepass consumes.  The serving
+    registry caches the result per tier so none of this work is repeated
+    per query batch.
     """
     prec.validate(precision)
     if block_n == "auto":
@@ -339,18 +607,137 @@ def prepare_train_columns(x: jnp.ndarray, *, block_n: int = 512,
             128, "auto", rows=4096, cols=x.shape[0], d=x.shape[-1],
             precision=precision, measure=False,
         )
-    xp = _pad_to(x, block_n)
+    real = None
+    if clustered:
+        if index is None:
+            index = spatial.build_index(x, seed=seed)
+        labels = index.labels if (
+            index.labels is not None
+            and index.labels.shape[0] == x.shape[0]
+        ) else spatial.assign(x, index)
+        layout = spatial.cluster_layout(jnp.asarray(x), labels, block_n)
+        xp, real = layout.points, layout.real
+    else:
+        xp = _pad_to(x, block_n)
     if precision == "f32":
         xt, xt_lo = xp.astype(jnp.float32).T.astype(xp.dtype), None
+        xrec = xp.astype(jnp.float32)
         nrm_x = _norms(xp).reshape(1, -1)
     else:
         x_hi, x_lo = prec.cast_operand(xp.astype(jnp.float32), precision)
         xt, xt_lo = x_hi.T, None if x_lo is None else x_lo.T
-        nrm_x = _tier_norms(x_hi, x_lo).reshape(1, -1)
-    return TrainColumns(xt, xt_lo, nrm_x)
+        xrec = prec.reconstruct(x_hi, x_lo)
+        nrm_x = _norms(xrec).reshape(1, -1)
+    meta = meta_fine = None
+    if clustered:
+        meta = spatial.tile_metadata(xrec, real, block=block_n)
+        fine = autotune.FINE_PROBE_BLOCK
+        if block_n > fine and xp.shape[0] % fine == 0:
+            meta_fine = spatial.tile_metadata(xrec, real, block=fine)
+    return TrainColumns(xt, xt_lo, nrm_x, meta, index if clustered else None,
+                        meta_fine, block_n)
+
+
+def _cast_queries(yp: jnp.ndarray, precision: str):
+    """(y_hi, y_lo, nrm_y, yrec) for a padded query block at one tier."""
+    if precision == "f32":
+        y_hi, y_lo = yp, None
+        yrec = yp.astype(jnp.float32)
+    else:
+        y_hi, y_lo = prec.cast_operand(yp.astype(jnp.float32), precision)
+        yrec = prec.reconstruct(y_hi, y_lo)
+    return y_hi, y_lo, _norms(yrec), yrec
+
+
+def _pruned_eval_sums(
+    y: jnp.ndarray,
+    cols: TrainColumns,
+    h,
+    epsilon: float,
+    *,
+    precision: str,
+    block_m: int,
+    block_n: int,
+    interpret: bool,
+    laplace: bool,
+    n_real: Optional[int] = None,
+) -> jnp.ndarray:
+    """Pruned kernel sums (len(y),) for queries against prepared columns.
+
+    ``y`` may carry sentinel padding rows past ``n_real`` (the serving
+    path); only real rows enter the query layout.  This is the pruned
+    path's one host-sync orchestration: assign queries to the train
+    clusters → scatter into a cluster-aligned layout → bounds prepass →
+    compact visit lists (host) → launch → gather back to request order.
+    """
+    if cols.meta is None or cols.index is None:
+        raise ValueError(
+            "pruned evaluation needs spatially prepared train columns "
+            "(prepare_train_columns(..., clustered=True))"
+        )
+    if cols.block_n != block_n:
+        raise ValueError(
+            "pruned launch block_n must match the width the columns were "
+            f"prepared at: launch {block_n} vs prepared {cols.block_n} — "
+            "the tile metadata and visit lists address tiles of that width"
+        )
+    y = jnp.asarray(y)
+    m_in, d = y.shape
+    nr = m_in if n_real is None else min(n_real, m_in)
+    # scatter the real queries into their own cluster-aligned layout
+    # (assigned against the train centroids) so row tiles stay coherent
+    labels = spatial.assign(y[:nr], cols.index)
+    qlayout = spatial.cluster_layout(
+        jnp.asarray(y[:nr], jnp.float32), labels, block_m, bucket_rows=True
+    )
+    yp = qlayout.points
+    y_hi, y_lo, nrm_y, yrec = _cast_queries(yp, precision)
+    kind = "laplace" if laplace else "kde"
+    tm = spatial.tile_map(yrec, cols.meta, _inv2h2(h), epsilon,
+                          block_m=block_m, kind=kind)
+    vl = spatial.visit_lists(tm.keep)
+    # record under BOTH column counts a later resolve may key on: the
+    # true train count (flash_kde / flash_sdkde resolve pre-padding) and
+    # the padded layout length (the prepared serving path)
+    n_true = int(cols.meta.counts.sum())
+    _record_occupancy_profile(m_in, {n_true, cols.xt.shape[1]}, d,
+                              vl.occupancy, block_n, yrec, cols.meta_fine,
+                              _inv2h2(h), epsilon, block_m, kind)
+    sums = flash_pruned.flash_kde_pallas_pruned(
+        vl.counts, vl.tile_map, y_hi, nrm_y, cols.xt, cols.nrm_x,
+        _inv2h2(h), y_lo, cols.xt_lo,
+        block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
+        interpret=interpret, laplace=laplace,
+    )
+    out = sums[qlayout.slots, 0]                 # back to request order
+    if nr < m_in:                                # caller's sentinel tail
+        out = jnp.concatenate([out, jnp.zeros((m_in - nr,), out.dtype)])
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=_STATIC + ("laplace",))
+def _flash_kde_prepared_dense(
+    yp: jnp.ndarray,
+    xt: jnp.ndarray,
+    nrm_x: jnp.ndarray,
+    h,
+    xt_lo: jnp.ndarray | None = None,
+    *,
+    precision: str = "f32",
+    block_m=128,
+    block_n=512,
+    interpret: bool = False,
+    laplace: bool = False,
+) -> jnp.ndarray:
+    y_hi, y_lo, nrm_y, _ = _cast_queries(yp, precision)
+    kernel = flash_laplace_pallas if laplace else flash_kde_pallas
+    sums = kernel(
+        y_hi, nrm_y, xt, nrm_x, _inv2h2(h), y_lo, xt_lo,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
+    return sums[:, 0]
+
+
 def flash_kde_prepared(
     yp: jnp.ndarray,       # (m, d) queries, ALREADY padded to block_m multiple
     xt: jnp.ndarray,       # (d, n) from prepare_train_columns (tier-cast)
@@ -363,6 +750,9 @@ def flash_kde_prepared(
     block_n="auto",
     interpret: bool = False,
     laplace: bool = False,
+    prune: PruneArg = "off",
+    columns: Optional[TrainColumns] = None,
+    n_real: Optional[int] = None,
 ) -> jnp.ndarray:
     """No-reassert fast path: unnormalized kernel sums for pre-padded queries.
 
@@ -372,8 +762,17 @@ def flash_kde_prepared(
     (cached per precision tier) across every batch.  Returns raw sums (m,);
     the caller divides by ``n_true · (2π)^{d/2} h^d`` (padding rows give ~0
     and are sliced off by the caller).
+
+    ``prune`` ≠ "off" takes the cluster-pruned path: pass the full
+    ``columns`` (prepared with ``clustered=True``, so the tile metadata and
+    spatial index are fit-time state) and ``n_real`` = the true query count
+    so sentinel padding rows stay out of the row-tile geometry.  The dense
+    path stays jit-traceable; the pruned path host-syncs once per batch to
+    compact its visit lists.
     """
     prec.validate(precision)
+    if _traced(yp):
+        prune = "off"            # pruning host-syncs; stay traceable
     if (precision == "bf16x2") != (xt_lo is not None):
         raise ValueError(
             "bf16x2 needs prepared lo planes (and other tiers must not "
@@ -381,22 +780,30 @@ def flash_kde_prepared(
         )
     m, d = yp.shape
     n = xt.shape[1]
+    if prune != "off" and columns is not None and block_n == "auto":
+        # the visit lists index tiles of the prepare-time width — an
+        # autotuned width that differs would silently misaddress them
+        block_n = columns.block_n
     block_m, block_n = _resolve(
         block_m, block_n, m, n, d, out_width=1, precision=precision,
         interpret=interpret, row_multiple=m, col_multiple=n,
+        pruned=prune != "off",
     )
-    if precision == "f32":
-        y_hi, y_lo = yp, None
-        nrm_y = _norms(yp)
-    else:
-        y_hi, y_lo = prec.cast_operand(yp.astype(jnp.float32), precision)
-        nrm_y = _tier_norms(y_hi, y_lo)
-    kernel = flash_laplace_pallas if laplace else flash_kde_pallas
-    sums = kernel(
-        y_hi, nrm_y, xt, nrm_x, _inv2h2(h), y_lo, xt_lo,
-        block_m=block_m, block_n=block_n, interpret=interpret,
+    eps = resolve_prune(prune, n, block_n)
+    if eps is None:
+        return _flash_kde_prepared_dense(
+            yp, xt, nrm_x, h, xt_lo, precision=precision, block_m=block_m,
+            block_n=block_n, interpret=interpret, laplace=laplace,
+        )
+    if columns is None:
+        raise ValueError(
+            "flash_kde_prepared(prune=...) needs columns= (the clustered "
+            "TrainColumns) for the tile metadata"
+        )
+    return _pruned_eval_sums(
+        yp, columns, h, eps, precision=precision, block_m=block_m,
+        block_n=block_n, interpret=interpret, laplace=laplace, n_real=n_real,
     )
-    return sums[:, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -404,7 +811,6 @@ def flash_kde_prepared(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC)
 def flash_sdkde(
     x: jnp.ndarray,
     y: jnp.ndarray,
@@ -415,13 +821,67 @@ def flash_sdkde(
     block_m="auto",
     block_n="auto",
     interpret: bool = False,
+    prune: PruneArg = "auto",
+    seed: int = 0,
 ) -> jnp.ndarray:
-    """Full Flash-SD-KDE: score pass → shift → KDE at queries (normalized)."""
-    x_sd = flash_sdkde_shift(
-        x, h, score_h=score_h, precision=precision,
-        block_m=block_m, block_n=block_n, interpret=interpret,
+    """Full Flash-SD-KDE: score pass → shift → KDE at queries (normalized).
+
+    The pipeline shares one train-side prep: the spatial clustering is
+    computed once on ``x`` and its layout is reused for the score pass
+    (train×train) *and* the KDE eval on the shifted set — the debias shift
+    is O(h²), so the ordering stays tight — and the shifted set flows
+    through ``prepare_train_columns`` (no second pad/transpose).
+    """
+    prec.validate(precision)
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
+    n, d = x.shape
+    m = y.shape[0]
+    sh = h if score_h is None else score_h
+    s_bm, s_bn = _resolve(
+        block_m, block_n, n, n, d, out_width=d + 1, precision=precision,
+        interpret=interpret, pruned=prune != "off",
     )
-    return flash_kde(
-        x_sd, y, h, precision=precision,
-        block_m=block_m, block_n=block_n, interpret=interpret,
+    k_bm, k_bn = _resolve(
+        block_m, block_n, m, n, d, out_width=1, precision=precision,
+        interpret=interpret, pruned=prune != "off",
     )
+    s_eps = resolve_prune(prune, n, s_bn)
+    k_eps = resolve_prune(prune, n, k_bn)
+
+    x32 = jnp.asarray(x, jnp.float32)
+    index = None
+    if s_eps is not None or k_eps is not None:
+        index = spatial.build_index(x32, seed=seed)
+    if s_eps is None:
+        s0, s1 = _flash_score_stats_dense(
+            x32, sh, precision=precision, block_m=s_bm, block_n=s_bn,
+            interpret=interpret,
+        )
+    else:
+        s0, s1 = _score_stats_pruned(
+            x32, sh, s_eps, index, precision=precision, block_m=s_bm,
+            block_n=s_bn, interpret=interpret,
+        )
+    x_sd = _apply_score_shift(x32, s0, s1, h, sh)
+
+    # one shared eval-side prep, reusing the clustering: the labels fitted
+    # on x stay valid row-for-row for the O(h²)-shifted x_sd
+    cols = prepare_train_columns(
+        x_sd, block_n=k_bn, precision=precision,
+        clustered=k_eps is not None, index=index if k_eps is not None
+        else None,
+    )
+    if k_eps is None:
+        yp = _pad_to(jnp.asarray(y), k_bm)
+        sums = _flash_kde_prepared_dense(
+            yp, cols.xt, cols.nrm_x, h, cols.xt_lo, precision=precision,
+            block_m=k_bm, block_n=k_bn, interpret=interpret, laplace=False,
+        )[:m]
+    else:
+        sums = _pruned_eval_sums(
+            y, cols, h, k_eps, precision=precision, block_m=k_bm,
+            block_n=k_bn, interpret=interpret, laplace=False,
+        )
+    h = jnp.asarray(h, jnp.float32)
+    return sums / (n * gaussian_norm_const(d, 1.0) * h**d)

@@ -1,0 +1,418 @@
+"""Spatial tile reordering + certified tile skipping for the flash kernels.
+
+Every dense flash kernel streams all ``m/block_m × n/block_n`` tile pairs
+even though ``exp(-‖y−x‖²/2h²)`` underflows to exactly 0.0 for the vast
+majority of tiles at paper-scale problems.  This module supplies the three
+pieces a *pruned* pass needs (DEANN-style distance-aware pruning, with the
+error budgets certified per tile):
+
+  1. **Clustered layout** — k-means (default) or Morton grouping of the
+     (debiased) train set, laid out so every streamed ``block_n`` column
+     tile holds points of ONE cluster: each cluster's points are
+     contiguous and sentinel-padded up to a tile multiple.  Without the
+     per-cluster padding, the tiles at cluster boundaries straddle two
+     far-apart clusters, inherit a covering radius the size of their
+     separation, and can never be skipped — with tile size comparable to
+     cluster size that is *every* tile.  Queries go through the same
+     layout per batch (assigned to the train centroids), which keeps row
+     tiles spatially coherent so their visit lists stay short.
+  2. **Tile metadata** — per column tile: centroid, covering radius, real
+     (non-sentinel) point count, and max |coordinate| (the score kernel's
+     accumulator weight bound).  Sentinel rows are masked out, so
+     all-padding tiles carry ``count == 0`` and are skipped for free.
+  3. **Tile maps** — the bounds prepass.  For every *query row* the
+     distance to every column-tile centroid is one cheap
+     ``(m × n/block_n)`` GEMM; min-reducing it over each ``block_m`` row
+     tile gives
+
+         dmin_ij = max(0, min_{r ∈ tile i} ‖y_r − c_j‖ − radius_j)
+         arg_ij  = margin · dmin_ij² / (2h²)
+
+     a certified lower bound on every pairwise exponent of the (i, j)
+     tile (``margin < 1`` absorbs f32 round-off here and in the kernels'
+     norm-trick ``sq``).  Using the per-row min — rather than a row-tile
+     centroid+radius — keeps the bound tight even when a row tile spans
+     several clusters.  The per-point contribution of tile ``j`` to any
+     row of tile ``i`` is then at most
+
+         kde:      exp(-arg)
+         laplace:  exp(-arg) · (1 + d/2 + arg)      (decreasing in arg)
+         score:    exp(-arg) · max(1, max|x| in j)  (the φ@[X|1] weights)
+
+     A tile is skipped iff that bound is ≤ the caller's per-point
+     ``epsilon``, or iff ``arg`` clears the f32 exp-underflow threshold —
+     in which case the dense kernel would have accumulated *exactly 0.0*
+     for every pair, so ``epsilon=0`` pruning reproduces the dense result
+     bit-for-bit up to summation order.  The summed bound over skipped
+     tiles is returned as a per-row-tile error certificate (tests assert
+     the float64 dropped mass never exceeds it).
+
+The kept tiles are compacted into per-row-tile visit lists
+(``tile_map[i, k]`` = k-th column tile row block ``i`` must stream), which
+the pruned kernels consume via scalar prefetch — the grid shrinks from
+``m_tiles × n_tiles`` to ``m_tiles × max_visits``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_VALUE = 1.0e6   # matches ops.PAD_VALUE — kernel weight underflows to 0
+
+# f32 exp(-x) is exactly 0.0 for x > 150·ln2 ≈ 103.97 (subnormal rounding).
+# 105 adds a hair of slack; MARGIN then demands ~11% more headroom before a
+# tile may be skipped under the exact (epsilon=0) rule.
+UNDERFLOW_ARG = 105.0
+#: Conservative shrink on the certified exponent lower bound: covers f32
+#: rounding in the bounds prepass and the kernels' norms-minus-Gram ``sq``.
+MARGIN = 0.9
+
+KINDS = ("kde", "laplace", "score")
+
+
+class SpatialIndex(NamedTuple):
+    """A clustering of one point set: assignment state for layouts."""
+
+    labels: Optional[jnp.ndarray]      # (n,) int32 cluster of each point
+    centroids: Optional[jnp.ndarray]   # (k, d) f32 k-means centroids
+    method: str = "kmeans"
+
+
+class ClusterLayout(NamedTuple):
+    """A cluster-aligned padded layout of one point set.
+
+    ``points[slots[i]] == x[i]``; every other row is a sentinel.  Cluster
+    c occupies a contiguous, ``block``-aligned slab, so no ``block`` tile
+    ever holds two clusters.  ``real`` marks non-sentinel rows.
+    """
+
+    points: jnp.ndarray   # (total, d) padded layout
+    real: jnp.ndarray     # (total,) bool
+    slots: jnp.ndarray    # (n,) int32 — row of original point i
+    block: int
+
+
+class TileMeta(NamedTuple):
+    """Per-column-tile geometry of a cluster-aligned layout."""
+
+    centroids: jnp.ndarray   # (t, d) f32 centroid of the tile's real points
+    radii: jnp.ndarray       # (t,)   f32 max ‖x − centroid‖ over real points
+    counts: jnp.ndarray      # (t,)   int32 real (non-sentinel) points
+    max_abs: jnp.ndarray     # (t,)   f32 max |coordinate| over real points
+
+
+class TileMap(NamedTuple):
+    """Bounds-prepass output: which tiles each row block must visit."""
+
+    keep: jnp.ndarray        # (mt, t) bool
+    err_bound: jnp.ndarray   # (mt,)  f32 certified max abs error per row of
+    #                        # the unnormalized accumulator (worst component)
+
+
+class VisitLists(NamedTuple):
+    """Host-compacted tile map in the layout the pruned kernels prefetch."""
+
+    counts: jnp.ndarray      # (mt,) int32 visits per row tile
+    tile_map: jnp.ndarray    # (mt, max_visits) int32 column-tile indices
+    max_visits: int          # static grid extent (pow2-bucketed)
+    occupancy: float         # mean(counts) / n_tiles — the skip-rate stat
+
+
+# ---------------------------------------------------------------------------
+# Clustering.
+# ---------------------------------------------------------------------------
+
+
+def _sqdist(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    an = jnp.sum(a * a, axis=-1)[:, None]
+    bn = jnp.sum(b * b, axis=-1)[None, :]
+    return jnp.maximum(an + bn - 2.0 * (a @ b.T), 0.0)
+
+
+def default_n_clusters(n: int) -> int:
+    """sqrt-law cluster count: ~128 at 256k points, floor 2, cap 1024.
+
+    Erring toward MORE clusters than the data has is safe: pruning bounds
+    only tighten as clusters shrink, while the assignment/bounds GEMMs
+    stay O(n·k·d) — negligible next to the O(n·m·d) quadratic pass.
+    """
+    return max(2, min(1024, int(math.sqrt(max(n, 1) / 16.0))))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans_fit(x: jnp.ndarray, key: jnp.ndarray, *, k: int,
+                iters: int) -> jnp.ndarray:
+    """Lloyd iterations on (a subsample of) x; returns (k, d) centroids."""
+    n = x.shape[0]
+    c = x[jax.random.choice(key, n, (k,), replace=n < k)]
+    for _ in range(iters):
+        lab = jnp.argmin(_sqdist(x, c), axis=1)
+        one = jax.nn.one_hot(lab, k, dtype=jnp.float32)     # (n, k)
+        cnt = jnp.sum(one, axis=0)[:, None]                 # (k, 1)
+        sums = one.T @ x                                    # (k, d)
+        c = jnp.where(cnt > 0, sums / jnp.maximum(cnt, 1.0), c)
+    return c
+
+
+def _morton_codes(x: jnp.ndarray) -> jnp.ndarray:
+    """Interleaved-bit codes; coords quantized to the data range."""
+    n, d = x.shape
+    bits = max(1, 31 // d)
+    lo = jnp.min(x, axis=0, keepdims=True)
+    hi = jnp.max(x, axis=0, keepdims=True)
+    q = ((x - lo) / jnp.maximum(hi - lo, 1e-30) * (2**bits - 1)).astype(
+        jnp.int32
+    )
+    code = jnp.zeros((n,), jnp.int32)
+    for b in range(bits - 1, -1, -1):
+        for j in range(d):
+            code = (code << 1) | ((q[:, j] >> b) & 1)
+    return code
+
+
+def _morton_labels(x32: jnp.ndarray, group: int = 64) -> jnp.ndarray:
+    """Bucketed morton-rank labels: ~``group`` spatial neighbors per label."""
+    n = x32.shape[0]
+    order = jnp.argsort(_morton_codes(x32))
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return rank // group
+
+
+def build_index(
+    x: jnp.ndarray,
+    *,
+    method: str = "kmeans",
+    n_clusters: Optional[int] = None,
+    iters: int = 8,
+    fit_sample: int = 16384,
+    seed: int = 0,
+) -> SpatialIndex:
+    """Cluster a point set; O(n·k·d) — amortized at prep/fit time.
+
+    k-means fits Lloyd on a ≤``fit_sample`` subsample then assigns every
+    point in one pass.  Morton labels points by their interleaved-bit
+    code bucketed into ~64-point groups (grouping, not exact clustering —
+    a fallback for data k-means fits poorly).
+    """
+    x32 = jnp.asarray(x, jnp.float32)
+    n = x32.shape[0]
+    if method == "morton":
+        return SpatialIndex(_morton_labels(x32), None, "morton")
+    if method != "kmeans":
+        raise ValueError(f"unknown spatial ordering {method!r}")
+    k = n_clusters or default_n_clusters(n)
+    key = jax.random.PRNGKey(seed)
+    fit = x32 if n <= fit_sample else x32[
+        jax.random.choice(key, n, (fit_sample,), replace=False)
+    ]
+    c = _kmeans_fit(fit, jax.random.fold_in(key, 1), k=k, iters=iters)
+    labels = jnp.argmin(_sqdist(x32, c), axis=1).astype(jnp.int32)
+    return SpatialIndex(labels, c, "kmeans")
+
+
+def assign(y: jnp.ndarray, index: SpatialIndex) -> jnp.ndarray:
+    """Cluster labels for a NEW point set (queries) under a train index."""
+    y32 = jnp.asarray(y, jnp.float32)
+    if index.centroids is not None:
+        return jnp.argmin(_sqdist(y32, index.centroids), axis=1).astype(
+            jnp.int32
+        )
+    # morton / centroid-free indexes: group by the queries' own codes
+    return _morton_labels(y32)
+
+
+# ---------------------------------------------------------------------------
+# Cluster-aligned layouts.
+# ---------------------------------------------------------------------------
+
+
+def cluster_slots(labels, block: int) -> np.ndarray:
+    """Padded slot of each point: clusters contiguous, ``block``-multiples.
+
+    Host-side (the layout shape must be static for the launch anyway).
+    """
+    lab = np.asarray(labels)
+    n = lab.shape[0]
+    k = int(lab.max()) + 1 if n else 1
+    sizes = np.bincount(lab, minlength=k)
+    padded = ((sizes + block - 1) // block) * block       # empty → 0
+    starts = np.concatenate([[0], np.cumsum(padded)[:-1]])
+    order = np.argsort(lab, kind="stable")
+    within = np.empty(n, np.int64)
+    within[order] = np.arange(n) - np.repeat(
+        np.concatenate([[0], np.cumsum(sizes)[:-1]]), sizes
+    )
+    return (starts[lab] + within).astype(np.int32)
+
+
+def cluster_layout(x: jnp.ndarray, labels, block: int, *,
+                   total_multiple: Optional[int] = None,
+                   bucket_rows: bool = False) -> ClusterLayout:
+    """Scatter a point set into its cluster-aligned sentinel-padded layout.
+
+    ``total_multiple`` additionally pads the layout's total length up to a
+    multiple (the score pass needs lcm(block_m, block_n); single-sided
+    passes just need ``block``, which holds by construction).
+    ``bucket_rows`` rounds the tile count up to a power of two — per-batch
+    query layouts vary with the label mix, and bucketing keeps ragged
+    traffic on a bounded set of compiled shapes (extra tiles are all
+    sentinel: zero count, never visited).
+    """
+    x = jnp.asarray(x)
+    n, d = x.shape
+    lab = np.asarray(labels)
+    slots = cluster_slots(lab, block)
+    sizes = np.bincount(lab, minlength=(int(lab.max()) + 1) if n else 1)
+    total = int((((sizes + block - 1) // block) * block).sum())
+    total = max(total, block)
+    if bucket_rows:
+        tiles = -(-total // block)
+        total = block * (1 << max(0, math.ceil(math.log2(tiles))))
+    if total_multiple is not None:
+        total = -(-total // total_multiple) * total_multiple
+    slots_j = jnp.asarray(slots)
+    points = jnp.full((total, d), PAD_VALUE, x.dtype).at[slots_j].set(x)
+    real = jnp.zeros((total,), bool).at[slots_j].set(True)
+    return ClusterLayout(points, real, slots_j, block)
+
+
+# ---------------------------------------------------------------------------
+# Tile metadata.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tile_metadata(xp: jnp.ndarray, real: jnp.ndarray, *,
+                  block: int) -> TileMeta:
+    """Geometry of each ``block``-row tile of a cluster-aligned layout.
+
+    ``real`` masks sentinel rows out of every statistic.  ``xp`` must be
+    the f32 points the kernel *actually* computes distances between — at
+    reduced precision tiers, the tier-cast reconstruction — so the bounds
+    certify the perturbed-operand distances, not the originals.
+    """
+    npad, d = xp.shape
+    t = npad // block
+    x3 = jnp.asarray(xp, jnp.float32).reshape(t, block, d)
+    mask = jnp.asarray(real).reshape(t, block)
+    cnt = jnp.sum(mask, axis=1).astype(jnp.int32)
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)[:, None]
+    cen = jnp.sum(jnp.where(mask[..., None], x3, 0.0), axis=1) / denom
+    sq = jnp.sum((x3 - cen[:, None, :]) ** 2, axis=-1)       # (t, block)
+    radii = jnp.sqrt(jnp.max(jnp.where(mask, sq, 0.0), axis=1))
+    max_abs = jnp.max(
+        jnp.where(mask[..., None], jnp.abs(x3), 0.0), axis=(1, 2)
+    )
+    return TileMeta(cen, radii, cnt, max_abs)
+
+
+# ---------------------------------------------------------------------------
+# The bounds prepass.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "kind"))
+def tile_map(
+    yp: jnp.ndarray,          # (m_pad, d) f32 padded query rows
+    col_meta: TileMeta,
+    inv2h2: jnp.ndarray,
+    epsilon,
+    *,
+    block_m: int,
+    kind: str = "kde",
+) -> TileMap:
+    """Certified keep/skip decision for every (row tile, column tile) pair.
+
+    The bound starts from each *query row's* exact distance to each column
+    tile centroid (one (m × t) GEMM), min-reduced over the row tile —
+    sentinel query rows sit at distance ~PAD_VALUE·√d and never win the
+    min, so row tiles need no metadata of their own and stay tight even
+    when they span clusters.
+
+    ``epsilon`` is the per-train-point contribution threshold: a skipped
+    tile's certified per-point bound (see module docstring) is ≤ epsilon,
+    so the absolute error on any row of the unnormalized accumulator is at
+    most ``Σ_skipped count_j · bound_ij`` — returned as ``err_bound`` (and,
+    loosely, ≤ n·epsilon).  ``epsilon=0`` only skips tiles whose every
+    pairwise term underflows to exactly 0.0 in f32.
+    """
+    assert kind in KINDS, kind
+    eps = jnp.asarray(epsilon, jnp.float32)
+    m_pad, d = yp.shape
+    mt = m_pad // block_m
+
+    def row_tile_min(y_tile):                    # (block_m, d) -> (t,)
+        dist = jnp.sqrt(_sqdist(y_tile, col_meta.centroids))
+        return jnp.min(dist, axis=0)
+
+    dmin_c = jax.lax.map(
+        row_tile_min, jnp.asarray(yp, jnp.float32).reshape(mt, block_m, d)
+    )                                            # (mt, t) min row→centroid
+    dmin = jnp.maximum(dmin_c - col_meta.radii[None, :], 0.0)
+    arg = MARGIN * dmin * dmin * inv2h2.reshape(())
+    if kind == "laplace":
+        w = 1.0 + d / 2.0 + arg
+    elif kind == "score":
+        w = jnp.maximum(1.0, col_meta.max_abs)[None, :]
+    else:
+        w = 1.0
+    bound = w * jnp.exp(-arg)                    # per-point, per (i, j)
+    skip = (arg >= UNDERFLOW_ARG) | (col_meta.counts == 0)[None, :]
+    skip = skip | ((eps > 0.0) & (bound <= eps))
+    keep = ~skip
+    err = jnp.sum(
+        jnp.where(skip, col_meta.counts[None, :].astype(jnp.float32) * bound,
+                  0.0),
+        axis=1,
+    )
+    return TileMap(keep, err)
+
+
+def visit_lists(keep, *, bucket_visits: bool = True) -> VisitLists:
+    """Compact a keep matrix into the prefetched visit-list layout.
+
+    This is the one host-sync point of the pruned path: the grid's static
+    ``max_visits`` extent must be a Python int.  ``bucket_visits`` rounds it
+    up to a power of two (capped at n_tiles) so ragged traffic reuses at
+    most log2(n_tiles) compiled grid shapes per launch config; slots past a
+    row's count are masked out in-kernel (they replay the row's first kept
+    tile, keeping the DMA stream warm and valid).
+    """
+    k = np.asarray(keep)
+    mt, t = k.shape
+    counts = k.sum(axis=1).astype(np.int32)
+    kmax = max(int(counts.max(initial=0)), 1)
+    if bucket_visits and kmax < t:
+        kmax = min(t, 1 << max(0, math.ceil(math.log2(kmax))))
+    order = np.argsort(~k, axis=1, kind="stable")[:, :kmax].astype(np.int32)
+    fill = np.where(counts > 0, order[:, 0], 0).astype(np.int32)
+    pad = np.arange(kmax)[None, :] >= counts[:, None]
+    tmap = np.where(pad, fill[:, None], order)
+    occ = float(counts.mean() / t) if t else 1.0
+    return VisitLists(jnp.asarray(counts), jnp.asarray(tmap), int(kmax), occ)
+
+
+def epsilon_for_density_error(abs_err: float, d: int, h: float) -> float:
+    """Per-point epsilon giving |Δdensity| ≤ abs_err (normalization undone).
+
+    density = sums / (n·(2π)^{d/2}·h^d) and the dropped unnormalized mass
+    is ≤ n·epsilon, so epsilon = abs_err · (2π)^{d/2} · h^d.
+    """
+    return float(abs_err * (2.0 * math.pi) ** (d / 2.0) * h**d)
+
+
+__all__ = [
+    "PAD_VALUE", "UNDERFLOW_ARG", "MARGIN", "KINDS", "SpatialIndex",
+    "ClusterLayout", "TileMeta", "TileMap", "VisitLists",
+    "default_n_clusters", "build_index", "assign", "cluster_slots",
+    "cluster_layout", "tile_metadata", "tile_map", "visit_lists",
+    "epsilon_for_density_error",
+]

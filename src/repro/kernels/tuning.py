@@ -102,11 +102,15 @@ def pair_pass_cost(
     scalar = 4.0 * pairs + (2.0 * pairs if ow == 1 else 0.0)
 
     # VMEM working set: matches ops.vmem_tile_bytes (operands at itemsize,
-    # f32 norms / φ tile / accumulator at 4 bytes)
+    # f32 norms / φ tile / accumulator at 4 bytes).  The xaug column tile
+    # exists only on the score path (ow > 1); KDE/Laplace accumulate a
+    # single column, so budgeting the (block_n, d+1) tile and a (d+1)-wide
+    # accumulator for them would shrink the feasible tile space for no
+    # reason.
     vmem = itemsize * (
-        block_m * d + d * block_n + block_n * (d + 1)
+        block_m * d + d * block_n + (block_n * (d + 1) if ow > 1 else 0)
     ) + 4 * (
-        block_m + block_n + block_m * block_n + block_m * (d + 1)
+        block_m + block_n + block_m * block_n + block_m * ow
     )
     return KernelCost(block_m, block_n, hbm, gram + accum, exps, scalar, vmem)
 

@@ -16,16 +16,13 @@ all-reduces for the nested (pod, data) spec).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.distributed.compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

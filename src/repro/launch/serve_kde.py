@@ -44,6 +44,12 @@ def main():
     ap.add_argument("--precision", default="f32",
                     choices=["f32", "bf16", "bf16x2"],
                     help="Pallas GEMM-operand tier (kernels/precision.py)")
+    prune_arg = lambda s: s if s in ("auto", "off") else float(s)  # noqa: E731
+    ap.add_argument("--prune", type=prune_arg, default="auto",
+                    help="cluster pruning: 'auto' (exact, epsilon=0, on for "
+                         "large sets), 'off' (dense), or a per-point "
+                         "contribution epsilon like 1e-9 "
+                         "(kernels/spatial.py)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check a batch against the jnp reference")
@@ -59,7 +65,7 @@ def main():
     cfg = ServeConfig(
         backend=args.backend, method=args.method, interpret=True,
         block_m=args.block_m, block_n=block_n,
-        precision=args.precision,
+        precision=args.precision, prune=args.prune,
         min_batch=args.min_batch, max_batch=args.max_batch,
     )
     eng = ServeEngine(cfg)
@@ -69,6 +75,7 @@ def main():
     fit_ms = 1e3 * (time.perf_counter() - t0)
     print(f"registered: backend={args.backend} method={args.method} "
           f"n={args.n} d={args.d} h={prep.h:.4f} precision={args.precision} "
+          f"prune={args.prune} "
           f"fit={fit_ms:.0f}ms (debias amortized; never re-run per query)")
     if prep.block_m is not None:
         print(f"launch tiles: block_m={prep.block_m} block_n={prep.block_n}"

@@ -51,6 +51,13 @@ class ServeConfig:
     # serving tier — reduced-precision *queries* perturb one GEMM, while a
     # reduced-precision fit would bake its error into every future answer.
     fit_precision: Precision = "f32"
+    # Cluster pruning (kernels/spatial.py, pallas backend): "auto" prunes
+    # exactly (epsilon=0, certified-underflow tiles only) once the train
+    # set is large enough; "off" streams every tile; a float is the
+    # per-point contribution threshold epsilon.  The registry caches the
+    # clustered ordering + tile metadata per tier at fit time, so pruning
+    # costs only the cheap bounds prepass on the query path.
+    prune: Union[str, float] = "auto"
 
     # micro-batching policy
     min_batch: int = 128         # smallest shape bucket
@@ -69,6 +76,13 @@ class ServeConfig:
         for b in (self.block_m, self.block_n):
             if not (b == "auto" or (isinstance(b, int) and b > 0)):
                 raise ValueError(f"bad Pallas block {b!r} (int or 'auto')")
+        p = self.prune
+        if not (p in ("auto", "off")
+                or (isinstance(p, (int, float)) and not isinstance(p, bool)
+                    and p >= 0)):
+            raise ValueError(
+                f"bad prune {p!r} ('auto', 'off', or epsilon >= 0)"
+            )
 
     def row_multiple(self, ring_size: int = 1,
                      block_m: Optional[int] = None) -> int:

@@ -121,10 +121,15 @@ class ServeEngine:
             (prep.key, prep.generation, tier, bucket),
             lambda: self._build_executable(prep, tier),
         )
-        return fn(pad_queries(y, bucket))[: y.shape[0]]
+        return fn(pad_queries(y, bucket), y.shape[0])[: y.shape[0]]
 
     def _build_executable(self, prep: PreparedEstimator, tier: str):
         """Bucket executable: padded (bucket, d) queries → (bucket,) dens.
+
+        The executable signature is ``fn(yp, n_real)`` — ``n_real`` is the
+        true (pre-padding) query count; the pruned pallas path needs it to
+        keep sentinel rows out of the row-tile geometry, every other
+        backend ignores it.
 
         Each executable owns its jit wrapper (train tensors passed as
         arguments, not baked as constants), so evicting an entry from the
@@ -138,13 +143,34 @@ class ServeEngine:
             from repro.kernels import ops
 
             cols = prep.columns_for(tier)
+            # decide pruning ONCE per executable: "auto" below the size
+            # threshold means every request takes the plain jitted dense
+            # path — no per-request python dispatch overhead
+            eps = ops.resolve_prune(cfg.prune, prep.n_true, prep.block_n)
+            if eps is not None and cols.meta is not None:
+                # Pruned path: not a single jit program — the per-batch
+                # bounds prepass host-syncs to compact visit lists, and
+                # flash_kde_prepared jit-caches the kernel per bucketed
+                # visit extent underneath.
+                def pruned_fn(yp, n_real):
+                    sums = ops.flash_kde_prepared(
+                        yp, cols.xt, cols.nrm_x, prep.h, cols.xt_lo,
+                        precision=tier,
+                        block_m=prep.block_m, block_n=prep.block_n,
+                        interpret=cfg.interpret, laplace=laplace,
+                        prune=cfg.prune, columns=cols, n_real=n_real,
+                    )
+                    return sums / prep.norm
+
+                return pruned_fn
             jfn = jax.jit(lambda yp, xt, nrm_x, xt_lo: ops.flash_kde_prepared(
                 yp, xt, nrm_x, prep.h, xt_lo,
                 precision=tier,
                 block_m=prep.block_m, block_n=prep.block_n,
                 interpret=cfg.interpret, laplace=laplace,
             ) / prep.norm)
-            return lambda yp: jfn(yp, cols.xt, cols.nrm_x, cols.xt_lo)
+            return lambda yp, n_real: jfn(yp, cols.xt, cols.nrm_x,
+                                          cols.xt_lo)
 
         if cfg.backend == "ring":
             from repro.distributed import ring
@@ -153,7 +179,7 @@ class ServeEngine:
             jfn = jax.jit(lambda yp, xs: eval_fn(
                 xs, yp, prep.h, n_true=prep.n_true, mesh=prep.mesh,
             ))
-            return lambda yp: jfn(yp, prep.x_sharded)
+            return lambda yp, n_real: jfn(yp, prep.x_sharded)
 
         from repro.core import kde as ref
 
@@ -161,7 +187,7 @@ class ServeEngine:
         jfn = jax.jit(
             lambda yp, pts: eval_fn(pts, yp, prep.h, block=cfg.block)
         )
-        return lambda yp: jfn(yp, prep.points)
+        return lambda yp, n_real: jfn(yp, prep.points)
 
 
 __all__ = ["ServeEngine"]

@@ -54,16 +54,29 @@ class PreparedEstimator:
     def columns_for(self, precision: str):
         """Prepared train tensors for one tier (built once, then cached).
 
-        Returns the ``ops.TrainColumns`` (xt, xt_lo, nrm_x) triple the
-        prepared fast path consumes; the per-tier cache is what lets one
-        registered dataset serve f32 and bf16 traffic side by side without
-        re-padding/transposing per request.
+        Returns the ``ops.TrainColumns`` the prepared fast path consumes;
+        the per-tier cache is what lets one registered dataset serve f32
+        and bf16 traffic side by side without re-padding/transposing per
+        request.  When the config enables pruning, every tier is prepared
+        ``clustered`` and all tiers share ONE spatial index (clustered
+        once at fit), so their tile layouts — and the engine's bucket
+        executables — agree across tiers.
         """
         if precision not in self._columns:
             from repro.kernels import ops
 
+            # cluster only when pruning can actually engage for this set
+            # ("auto" below the size threshold stays dense end to end)
+            clustered = ops.resolve_prune(
+                self.config.prune, self.n_true, self.block_n or 512
+            ) is not None
+            shared = next(
+                (c.index for c in self._columns.values()
+                 if c.index is not None), None,
+            )
             self._columns[precision] = ops.prepare_train_columns(
-                self.points, block_n=self.block_n, precision=precision
+                self.points, block_n=self.block_n, precision=precision,
+                clustered=clustered, index=shared,
             )
         return self._columns[precision]
 
@@ -171,10 +184,14 @@ class EstimatorRegistry:
                 cfg.block_m, cfg.block_n, rows=cfg.max_batch, cols=n, d=d,
                 out_width=1, precision=cfg.precision,
                 measure=False if cfg.interpret else None,
-                vmem_itemsize=4,
+                vmem_itemsize=4, pruned=cfg.prune != "off",
             )
+            clustered = ops.resolve_prune(
+                cfg.prune, n, prep.block_n
+            ) is not None
             prep._columns[cfg.precision] = ops.prepare_train_columns(
-                points, block_n=prep.block_n, precision=cfg.precision
+                points, block_n=prep.block_n, precision=cfg.precision,
+                clustered=clustered,
             )
         elif cfg.backend == "ring":
             from repro.distributed import ring
@@ -202,6 +219,9 @@ class EstimatorRegistry:
             block_m=cfg.block_m, block_n=cfg.block_n,
             interpret=cfg.interpret, score_h=cfg.score_h,
             precision=cfg.fit_precision,
+            # like fit_precision: the amortized fit never spends its
+            # epsilon budget — exact (underflow-only) pruning at most
+            prune="auto" if cfg.prune != "off" else "off",
         )
         return SDKDE(h, est_cfg).fit(x).x_sd[:n]
 

@@ -12,7 +12,7 @@ import pytest
 _CHILD = r"""
 import dataclasses, tempfile
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ShapeCfg, get_arch

@@ -13,9 +13,8 @@ import pytest
 
 _CHILD = r"""
 import jax, jax.numpy as jnp, dataclasses
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                     axis_types=(AxisType.Auto,)*3)
+from repro.distributed.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 2, 2), ('pod', 'data', 'model'))
 from repro.configs import get_arch, ShapeCfg
 from repro.launch.steps import build_cell
 

@@ -17,9 +17,9 @@ import pytest
 
 _CHILD = r"""
 import jax, jax.numpy as jnp, numpy as np, dataclasses
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
-mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                     axis_types=(AxisType.Auto,)*3)
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.distributed.compat import make_auto_mesh
+mesh = make_auto_mesh((2, 2, 2), ('pod', 'data', 'model'))
 from repro.models.common import ModelConfig, init_params
 from repro.models import moe
 

@@ -124,8 +124,9 @@ def test_checkpoint_ignores_torn_writes():
 
 
 def test_checkpoint_restore_with_sharding():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.compat import make_auto_mesh
+
+    mesh = make_auto_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     with tempfile.TemporaryDirectory() as d:
