@@ -1,0 +1,101 @@
+"""Benchmark regression gate: modeled-speedup cells vs committed baseline.
+
+Compares every ``modeled_speedup`` cell of a fresh ``BENCH_flash.json``
+against the committed ``benchmarks/BENCH_baseline.json`` and exits nonzero
+when any cell regressed more than the tolerance (default 15%) — CI runs
+this right after the benchmark suite, so a PR that silently halves a
+modeled speedup fails instead of uploading a healthy-looking artifact.
+
+Only *modeled* speedups are gated: they are deterministic functions of the
+cost model, tuned tiles and (seeded) measured occupancies, so a 15% drop
+is a code change, not machine noise.  Wall-clock cells (qps, p99, raw ms)
+are tracked in the artifact but not gated.  One deliberate exception: the
+baseline pins ``streaming_acceptance`` at its *target* ratio rather than a
+measured value, because that cell's ratio is wall-clock-derived and varies
+across runners — the gate then enforces "still comfortably past target"
+instead of "within 15% of one machine's timing".
+
+A suite that recorded failed harnesses (``meta.failed_harnesses``) fails
+the gate outright, partial artifact or not.
+
+    PYTHONPATH=src python -m benchmarks.check_regression
+    PYTHONPATH=src python -m benchmarks.check_regression --tolerance 0.25
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATE_FIELD = "modeled_speedup"
+#: Fields that identify a cell across runs (whichever are present).
+ID_FIELDS = ("n", "m", "d", "h", "epsilon", "batch", "precision", "backend")
+
+
+def cell_key(cell: dict) -> tuple:
+    return (cell.get("cell"),) + tuple(
+        (k, cell[k]) for k in ID_FIELDS if k in cell
+    )
+
+
+def check(current: dict, baseline: dict, tolerance: float):
+    """Returns (rows, failures): one row per gated baseline cell."""
+    cur_cells = {cell_key(c): c for c in current.get("cells", ())
+                 if GATE_FIELD in c}
+    rows, failures = [], []
+    for b in baseline.get("cells", ()):
+        if GATE_FIELD not in b:
+            continue
+        key = cell_key(b)
+        floor = float(b[GATE_FIELD]) * (1.0 - tolerance)
+        c = cur_cells.get(key)
+        if c is None:
+            failures.append(f"gated cell missing from current run: {key}")
+            rows.append((key, float(b[GATE_FIELD]), None, False))
+            continue
+        got = float(c[GATE_FIELD])
+        ok = got >= floor
+        rows.append((key, float(b[GATE_FIELD]), got, ok))
+        if not ok:
+            failures.append(
+                f"{key}: {GATE_FIELD} {got:.2f} < floor {floor:.2f} "
+                f"(baseline {float(b[GATE_FIELD]):.2f}, "
+                f"tolerance {tolerance:.0%})"
+            )
+    failed = (current.get("meta") or {}).get("failed_harnesses")
+    if failed:
+        failures.append(f"current run recorded failed harnesses: {failed}")
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_flash.json")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, failures = check(current, baseline, args.tolerance)
+    for key, base, got, ok in rows:
+        name = key[0] + " " + " ".join(f"{k}={v}" for k, v in key[1:])
+        got_s = "MISSING" if got is None else f"{got:.2f}"
+        print(f"{'ok  ' if ok else 'FAIL'} {name}: baseline {base:.2f} "
+              f"current {got_s}")
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} gated cells within {args.tolerance:.0%} "
+          "of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

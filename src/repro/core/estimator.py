@@ -18,6 +18,7 @@ from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bandwidth as bw
 from repro.core import kde as ref
@@ -83,14 +84,24 @@ class SDKDE(KDE):
 
     ``fit`` performs the quadratic score pass (the paper's hot spot) and
     caches the debiased samples; ``evaluate`` is then a standard KDE pass.
+
+    ``append``/``evict`` update a fitted estimator *incrementally* — the
+    O(n·b·d) delta score pass of ``repro.stream.delta`` instead of a fresh
+    O(n²·d) fit.  The first incremental call pays one full pass to seed
+    float64 score statistics; every later update is a delta against them,
+    and the debiased samples are recomputed from the maintained statistics
+    (matching a from-scratch refit to float tolerance).  The bandwidth
+    stays the fit-time one — streaming updates change the data, not ``h``.
     """
 
     def __init__(self, h=None, config: EstimatorConfig | None = None):
         super().__init__(h, config)
         self.x_sd: jnp.ndarray | None = None
+        self._s0 = self._s1 = None       # f64 score stats (lazy, streaming)
 
     def fit(self, x: jnp.ndarray) -> "SDKDE":
         self.x_train = jnp.asarray(x, self.config.dtype)
+        self._s0 = self._s1 = None       # a refit invalidates seeded stats
         if self.h is None:
             self.h = bw.sdkde_bandwidth(self.x_train)
         cfg = self.config
@@ -118,6 +129,67 @@ class SDKDE(KDE):
     def _train_points(self) -> jnp.ndarray:
         assert self.x_sd is not None, "call fit() first"
         return self.x_sd
+
+    # -- incremental updates (repro.stream.delta) ------------------------
+
+    def _score_h(self) -> float:
+        sh = self.config.score_h
+        return float(self.h if sh is None else sh)
+
+    def _seed_stats(self, x_live):
+        from repro.stream import delta
+
+        if self._s0 is None:
+            self._s0, self._s1 = delta.initial_stats(x_live, self._score_h())
+
+    def _refresh_shift(self) -> None:
+        from repro.stream import delta
+
+        x_live = np.asarray(self.x_train, np.float32)
+        self.x_sd = jnp.asarray(
+            delta.apply_shift(
+                x_live, self._s0, self._s1, float(self.h), self._score_h()
+            ).astype(np.float32)
+        )
+
+    def append(self, x_new) -> "SDKDE":
+        """Fold new points into a fitted estimator without a refit."""
+        from repro.stream import delta
+
+        assert self.x_sd is not None, "call fit() first"
+        x_new = np.atleast_2d(np.asarray(x_new, np.float32))
+        x_live = np.asarray(self.x_train, np.float32)
+        self._seed_stats(x_live)
+        ds0, ds1, s0n, s1n = delta.append_delta(
+            x_live, x_new, self._score_h()
+        )
+        self._s0 = np.concatenate([self._s0 + ds0, s0n])
+        self._s1 = np.concatenate([self._s1 + ds1, s1n])
+        self.x_train = jnp.concatenate(
+            [self.x_train, jnp.asarray(x_new, self.config.dtype)]
+        )
+        self._refresh_shift()
+        return self
+
+    def evict(self, idx) -> "SDKDE":
+        """Remove train rows (by position) without a refit."""
+        from repro.stream import delta
+
+        assert self.x_sd is not None, "call fit() first"
+        x_live = np.asarray(self.x_train, np.float32)
+        out = np.zeros(x_live.shape[0], bool)
+        out[np.atleast_1d(np.asarray(idx, np.int64))] = True
+        if out.all():
+            raise ValueError("cannot evict every train point")
+        self._seed_stats(x_live)
+        ds0, ds1 = delta.evict_delta(
+            x_live[~out], x_live[out], self._score_h()
+        )
+        self._s0 = self._s0[~out] - ds0
+        self._s1 = self._s1[~out] - ds1
+        self.x_train = self.x_train[jnp.asarray(~out)]
+        self._refresh_shift()
+        return self
 
 
 class LaplaceKDE(KDE):

@@ -37,6 +37,7 @@ from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bandwidth import gaussian_norm_const
 from repro.kernels import autotune, flash_pruned, spatial
@@ -619,6 +620,29 @@ def prepare_train_columns(
         xp, real = layout.points, layout.real
     else:
         xp = _pad_to(x, block_n)
+    return columns_from_layout(
+        xp, real, index if clustered else None,
+        block_n=block_n, precision=precision,
+    )
+
+
+def columns_from_layout(
+    xp: jnp.ndarray,
+    real: Optional[jnp.ndarray],
+    index: Optional[spatial.SpatialIndex],
+    *,
+    block_n: int,
+    precision: str = "f32",
+) -> TrainColumns:
+    """TrainColumns from an already-scattered padded layout.
+
+    The streaming layer owns its layout (slack slots, in-place refreshes)
+    and calls this to (re)build the per-tier cast planes + norms + tile
+    metadata; ``prepare_train_columns`` routes through here too, so both
+    paths share one casting/metadata recipe.  ``real=None`` means a plain
+    tail-padded (non-clustered) layout: no metadata is attached.
+    """
+    prec.validate(precision)
     if precision == "f32":
         xt, xt_lo = xp.astype(jnp.float32).T.astype(xp.dtype), None
         xrec = xp.astype(jnp.float32)
@@ -629,13 +653,79 @@ def prepare_train_columns(
         xrec = prec.reconstruct(x_hi, x_lo)
         nrm_x = _norms(xrec).reshape(1, -1)
     meta = meta_fine = None
-    if clustered:
+    if real is not None:
         meta = spatial.tile_metadata(xrec, real, block=block_n)
         fine = autotune.FINE_PROBE_BLOCK
         if block_n > fine and xp.shape[0] % fine == 0:
             meta_fine = spatial.tile_metadata(xrec, real, block=fine)
-    return TrainColumns(xt, xt_lo, nrm_x, meta, index if clustered else None,
-                        meta_fine, block_n)
+    return TrainColumns(xt, xt_lo, nrm_x, meta, index, meta_fine, block_n)
+
+
+def update_train_columns(
+    cols: TrainColumns,
+    xp: jnp.ndarray,
+    real: jnp.ndarray,
+    tiles,
+    *,
+    precision: str = "f32",
+) -> TrainColumns:
+    """Refresh prepared columns for only the listed column tiles.
+
+    The streaming delta path: after appends/evictions/shift drift touch a
+    subset of tiles, re-cast those tiles' operand columns, recompute their
+    norms and tile metadata, and carry every untouched column over
+    bit-for-bit.  The *compute* saved is the per-tile cast/split, norm
+    and metadata reductions — the functional ``.at[].set`` updates still
+    copy the full (d, n) planes, so a flush remains Θ(n·d) in memory
+    traffic; what this buys is skipping the reduction work and keeping
+    clean tiles' certificates byte-identical.  ``tiles`` may contain
+    repeats (pow2-padded index buffers keep retraces bounded); each write
+    is recomputed from the current layout, so repeated writes are
+    idempotent.
+    """
+    prec.validate(precision)
+    block = cols.block_n
+    tiles_np = np.asarray(tiles, np.int64).reshape(-1)
+    if tiles_np.size == 0:
+        return cols
+    rows_np = tiles_np[:, None] * block + np.arange(block)[None, :]
+    rows = jnp.asarray(rows_np.reshape(-1), jnp.int32)
+    sub = jnp.asarray(xp, jnp.float32)[rows]             # (k·block, d)
+    if precision == "f32":
+        hi, lo = sub.astype(cols.xt.dtype), None
+        rec = sub
+    else:
+        hi, lo = prec.cast_operand(sub, precision)
+        rec = prec.reconstruct(hi, lo)
+    xt = cols.xt.at[:, rows].set(hi.T)
+    xt_lo = cols.xt_lo if cols.xt_lo is None else (
+        cols.xt_lo.at[:, rows].set(lo.T)
+    )
+    nrm_x = cols.nrm_x.at[0, rows].set(_norms(rec)[:, 0])
+    meta, meta_fine = cols.meta, cols.meta_fine
+    if meta is not None:
+        mask = jnp.asarray(real)[rows]
+        meta = spatial.merge_tile_meta(
+            meta, tiles_np,
+            spatial.tile_meta_from_rows(
+                rec.reshape(tiles_np.size, block, -1),
+                mask.reshape(tiles_np.size, block),
+            ),
+        )
+        if meta_fine is not None:
+            fine = autotune.FINE_PROBE_BLOCK
+            ratio = block // fine
+            ftiles = (tiles_np[:, None] * ratio
+                      + np.arange(ratio)[None, :]).reshape(-1)
+            meta_fine = spatial.merge_tile_meta(
+                meta_fine, ftiles,
+                spatial.tile_meta_from_rows(
+                    rec.reshape(ftiles.size, fine, -1),
+                    mask.reshape(ftiles.size, fine),
+                ),
+            )
+    return cols._replace(xt=xt, xt_lo=xt_lo, nrm_x=nrm_x, meta=meta,
+                         meta_fine=meta_fine)
 
 
 def _cast_queries(yp: jnp.ndarray, precision: str):

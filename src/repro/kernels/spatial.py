@@ -234,7 +234,35 @@ def assign(y: jnp.ndarray, index: SpatialIndex) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def cluster_slots(labels, block: int) -> np.ndarray:
+def cluster_capacities(labels, block: int, *, slack: float = 0.0,
+                       n_clusters: Optional[int] = None):
+    """Per-cluster slab geometry ``(starts, caps)`` in padded-row units.
+
+    ``slack > 0`` reserves headroom beyond what the points need —
+    ``ceil(size · slack)`` extra rows per cluster, and at least one full
+    block even for an empty cluster — before rounding each slab up to a
+    ``block`` multiple.  The headroom rows are ordinary sentinel rows
+    until a streaming append claims them, so the padded layout's *shape*
+    survives appends: new points land in free slots instead of forcing a
+    re-scatter.  ``slack == 0`` reproduces the static layout exactly
+    (empty clusters get zero rows).
+    """
+    lab = np.asarray(labels)
+    k = n_clusters if n_clusters is not None else (
+        int(lab.max()) + 1 if lab.size else 1
+    )
+    sizes = np.bincount(lab, minlength=k)
+    if slack > 0.0:
+        want = sizes + np.ceil(sizes * slack).astype(np.int64)
+        want = np.maximum(want, 1)                        # empty → 1 block
+    else:
+        want = sizes
+    caps = ((want + block - 1) // block) * block
+    starts = np.concatenate([[0], np.cumsum(caps)[:-1]])
+    return starts.astype(np.int64), caps.astype(np.int64)
+
+
+def cluster_slots(labels, block: int, *, slack: float = 0.0) -> np.ndarray:
     """Padded slot of each point: clusters contiguous, ``block``-multiples.
 
     Host-side (the layout shape must be static for the launch anyway).
@@ -242,9 +270,8 @@ def cluster_slots(labels, block: int) -> np.ndarray:
     lab = np.asarray(labels)
     n = lab.shape[0]
     k = int(lab.max()) + 1 if n else 1
+    starts, _ = cluster_capacities(lab, block, slack=slack, n_clusters=k)
     sizes = np.bincount(lab, minlength=k)
-    padded = ((sizes + block - 1) // block) * block       # empty → 0
-    starts = np.concatenate([[0], np.cumsum(padded)[:-1]])
     order = np.argsort(lab, kind="stable")
     within = np.empty(n, np.int64)
     within[order] = np.arange(n) - np.repeat(
@@ -253,9 +280,34 @@ def cluster_slots(labels, block: int) -> np.ndarray:
     return (starts[lab] + within).astype(np.int32)
 
 
+def place_points(real, labels_new, starts, caps) -> Optional[np.ndarray]:
+    """Free slots for appended points, respecting the cluster slabs.
+
+    ``real`` marks occupied rows of the existing layout; each new point
+    (cluster ``labels_new[i]``) takes the first free sentinel slot inside
+    its cluster's ``[starts[c], starts[c] + caps[c])`` slab, so the
+    cluster-alignment invariant (no tile straddles clusters) is preserved
+    without touching any existing row.  Returns the claimed slots, or
+    ``None`` when some cluster's slab is full — slack overflow, the
+    caller's signal to rebuild the layout.
+    """
+    occ = np.asarray(real).copy()
+    lab = np.asarray(labels_new)
+    slots = np.empty(lab.shape[0], np.int32)
+    for i, c in enumerate(lab):
+        s, e = int(starts[c]), int(starts[c] + caps[c])
+        free = np.flatnonzero(~occ[s:e])
+        if free.size == 0:
+            return None
+        slots[i] = s + free[0]
+        occ[slots[i]] = True
+    return slots
+
+
 def cluster_layout(x: jnp.ndarray, labels, block: int, *,
                    total_multiple: Optional[int] = None,
-                   bucket_rows: bool = False) -> ClusterLayout:
+                   bucket_rows: bool = False,
+                   slack: float = 0.0) -> ClusterLayout:
     """Scatter a point set into its cluster-aligned sentinel-padded layout.
 
     ``total_multiple`` additionally pads the layout's total length up to a
@@ -264,14 +316,15 @@ def cluster_layout(x: jnp.ndarray, labels, block: int, *,
     ``bucket_rows`` rounds the tile count up to a power of two — per-batch
     query layouts vary with the label mix, and bucketing keeps ragged
     traffic on a bounded set of compiled shapes (extra tiles are all
-    sentinel: zero count, never visited).
+    sentinel: zero count, never visited).  ``slack`` reserves per-cluster
+    append headroom (see ``cluster_capacities``).
     """
     x = jnp.asarray(x)
     n, d = x.shape
     lab = np.asarray(labels)
-    slots = cluster_slots(lab, block)
-    sizes = np.bincount(lab, minlength=(int(lab.max()) + 1) if n else 1)
-    total = int((((sizes + block - 1) // block) * block).sum())
+    slots = cluster_slots(lab, block, slack=slack)
+    _, caps = cluster_capacities(lab, block, slack=slack)
+    total = int(caps.sum())
     total = max(total, block)
     if bucket_rows:
         tiles = -(-total // block)
@@ -289,6 +342,22 @@ def cluster_layout(x: jnp.ndarray, labels, block: int, *,
 # ---------------------------------------------------------------------------
 
 
+@jax.jit
+def tile_meta_from_rows(x3: jnp.ndarray, mask: jnp.ndarray) -> TileMeta:
+    """TileMeta of pre-gathered tile rows: (t, block, d) points, (t, block)
+    real-mask.  The shared reduction behind full and partial builds."""
+    x3 = jnp.asarray(x3, jnp.float32)
+    cnt = jnp.sum(mask, axis=1).astype(jnp.int32)
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)[:, None]
+    cen = jnp.sum(jnp.where(mask[..., None], x3, 0.0), axis=1) / denom
+    sq = jnp.sum((x3 - cen[:, None, :]) ** 2, axis=-1)       # (t, block)
+    radii = jnp.sqrt(jnp.max(jnp.where(mask, sq, 0.0), axis=1))
+    max_abs = jnp.max(
+        jnp.where(mask[..., None], jnp.abs(x3), 0.0), axis=(1, 2)
+    )
+    return TileMeta(cen, radii, cnt, max_abs)
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
 def tile_metadata(xp: jnp.ndarray, real: jnp.ndarray, *,
                   block: int) -> TileMeta:
@@ -303,15 +372,45 @@ def tile_metadata(xp: jnp.ndarray, real: jnp.ndarray, *,
     t = npad // block
     x3 = jnp.asarray(xp, jnp.float32).reshape(t, block, d)
     mask = jnp.asarray(real).reshape(t, block)
-    cnt = jnp.sum(mask, axis=1).astype(jnp.int32)
-    denom = jnp.maximum(cnt, 1).astype(jnp.float32)[:, None]
-    cen = jnp.sum(jnp.where(mask[..., None], x3, 0.0), axis=1) / denom
-    sq = jnp.sum((x3 - cen[:, None, :]) ** 2, axis=-1)       # (t, block)
-    radii = jnp.sqrt(jnp.max(jnp.where(mask, sq, 0.0), axis=1))
-    max_abs = jnp.max(
-        jnp.where(mask[..., None], jnp.abs(x3), 0.0), axis=(1, 2)
+    return tile_meta_from_rows(x3, mask)
+
+
+def merge_tile_meta(meta: TileMeta, tiles, sub: TileMeta) -> TileMeta:
+    """Write ``sub``'s rows over ``meta`` at the listed tile indices.
+
+    ``tiles`` may contain repeats (pow2-padded index buffers): each row of
+    ``sub`` is the freshly recomputed geometry of its tile, so repeated
+    writes are idempotent.
+    """
+    tiles = jnp.asarray(np.asarray(tiles, np.int32))
+    if tiles.size == 0:
+        return meta
+    return TileMeta(
+        meta.centroids.at[tiles].set(sub.centroids),
+        meta.radii.at[tiles].set(sub.radii),
+        meta.counts.at[tiles].set(sub.counts),
+        meta.max_abs.at[tiles].set(sub.max_abs),
     )
-    return TileMeta(cen, radii, cnt, max_abs)
+
+
+def tile_metadata_update(meta: TileMeta, xp: jnp.ndarray, real: jnp.ndarray,
+                         tiles, *, block: int) -> TileMeta:
+    """Refresh the metadata of only the listed tiles, in place.
+
+    The streaming layer calls this after an append/evict/delta-shift pass
+    with the set of tiles whose points actually changed — every other
+    tile's geometry is carried over bit-for-bit, so certificates derived
+    from it stay exactly as valid as at the last full build.
+    """
+    tiles_np = np.asarray(tiles, np.int64)
+    if tiles_np.size == 0:
+        return meta
+    rows = jnp.asarray(
+        (tiles_np[:, None] * block + np.arange(block)[None, :]), jnp.int32
+    )
+    sub = tile_meta_from_rows(jnp.asarray(xp, jnp.float32)[rows],
+                              jnp.asarray(real)[rows])
+    return merge_tile_meta(meta, tiles_np, sub)
 
 
 # ---------------------------------------------------------------------------
@@ -412,7 +511,8 @@ def epsilon_for_density_error(abs_err: float, d: int, h: float) -> float:
 __all__ = [
     "PAD_VALUE", "UNDERFLOW_ARG", "MARGIN", "KINDS", "SpatialIndex",
     "ClusterLayout", "TileMeta", "TileMap", "VisitLists",
-    "default_n_clusters", "build_index", "assign", "cluster_slots",
-    "cluster_layout", "tile_metadata", "tile_map", "visit_lists",
-    "epsilon_for_density_error",
+    "default_n_clusters", "build_index", "assign", "cluster_capacities",
+    "cluster_slots", "place_points", "cluster_layout", "tile_metadata",
+    "tile_meta_from_rows", "merge_tile_meta", "tile_metadata_update",
+    "tile_map", "visit_lists", "epsilon_for_density_error",
 ]

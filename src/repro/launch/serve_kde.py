@@ -53,6 +53,19 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check a batch against the jnp reference")
+    ap.add_argument("--stream", action="store_true",
+                    help="register a streaming estimator (repro.stream) and "
+                         "interleave appends/evictions with the query "
+                         "traffic — the O(n·b·d) delta pass instead of a "
+                         "refit per update")
+    ap.add_argument("--staleness-budget", type=int, default=2,
+                    help="generations a streamed query may lag live "
+                         "(stream mode; 0 = always fresh)")
+    ap.add_argument("--append-batch", type=int, default=64,
+                    help="points per streaming append (stream mode)")
+    ap.add_argument("--updates", type=int, default=16,
+                    help="append/evict updates interleaved with the "
+                         "traffic (stream mode)")
     args = ap.parse_args()
 
     mix = mixture_for_dim(args.d)
@@ -67,6 +80,7 @@ def main():
         block_m=args.block_m, block_n=block_n,
         precision=args.precision, prune=args.prune,
         min_batch=args.min_batch, max_batch=args.max_batch,
+        stream=args.stream, staleness_budget=args.staleness_budget,
     )
     eng = ServeEngine(cfg)
 
@@ -87,10 +101,22 @@ def main():
     rng = np.random.default_rng(args.seed)
     sizes = np.exp(rng.uniform(np.log(1), np.log(args.max_batch),
                                args.requests)).astype(int).clip(1)
+    update_every = (max(1, args.requests // max(args.updates, 1))
+                    if args.stream else 0)
     eng.query("traffic", pool[: args.max_batch])  # warm the largest bucket
     eng.latency.reset()
+    append_s, n_updates = 0.0, 0
     t0 = time.perf_counter()
-    for m in sizes:
+    for i, m in enumerate(sizes):
+        if update_every and i % update_every == 0:
+            # sliding-window update: append a fresh batch, evict the
+            # oldest as many — the O(n·b·d) delta pass, never a refit
+            fresh = mix.sample(jax.random.fold_in(key, 100 + i),
+                               args.append_batch)
+            ta = time.perf_counter()
+            eng.registry.slide("traffic", fresh)
+            append_s += time.perf_counter() - ta
+            n_updates += 1
         off = int(rng.integers(0, pool.shape[0] - m))
         eng.query("traffic", pool[off:off + m])
     wall = time.perf_counter() - t0
@@ -102,13 +128,34 @@ def main():
     print(f"bucket cache: {eng.cache.hits} hits / {eng.cache.misses} misses "
           f"/ {eng.cache.evictions} evictions "
           f"({len(eng.cache)} resident executables)")
+    if args.stream and n_updates:
+        st = eng.registry.get("traffic").stream
+        stale = eng.staleness_summary()
+        appends = n_updates * args.append_batch
+        print(f"streamed {n_updates} sliding-window updates "
+              f"({appends} appends + {appends} evictions) in "
+              f"{append_s:.2f}s: {appends / append_s:.0f} appends/s  "
+              f"staleness p50={stale.get('p50', 0)} "
+              f"p99={stale.get('p99', 0)} (budget "
+              f"{args.staleness_budget})  rebuilds={st.rebuilds}"
+              + (f" (last: {st.last_rebuild_reason})"
+                 if st.rebuilds else ""))
 
     if args.verify:
         yv = pool[:256]
+        if args.stream:
+            # the engine may legally serve up to staleness_budget
+            # generations behind live; force a flush so the verify query
+            # and the live-set reference see the same generation
+            eng.registry.get("traffic").stream.ensure(0)
         got = np.asarray(eng.query("traffic", yv))
         ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
                   "laplace": ref.laplace_kde_eval}[args.method]
-        want = np.asarray(ref_fn(x, yv, prep.h, block=1024))
+        # stream mode: the reference is the *current* live set, not the
+        # registered one — the whole point of the updates
+        x_ref = (eng.registry.get("traffic").stream.x
+                 if args.stream else x)
+        want = np.asarray(ref_fn(x_ref, yv, prep.h, block=1024))
         # the f32 reference path; reduced tiers verify at their documented
         # accuracy bars (rtol + peak-relative atol for deep-tail densities,
         # see kernels/precision.py)

@@ -64,6 +64,19 @@ class ServeConfig:
     max_batch: int = 4096        # largest shape bucket (larger batches chunk)
     cache_buckets: int = 8       # LRU capacity of jitted shape buckets
 
+    # streaming (repro.stream): maintain the registered dataset
+    # incrementally under registry.append()/evict_ids() instead of
+    # refitting.  ``staleness_budget`` is how many applied update
+    # generations a query may be served across before the engine must
+    # publish a fresh snapshot (0 = always fresh); ``stream_slack`` is the
+    # per-cluster append headroom of the Pallas layout;
+    # ``stream_background`` builds snapshots on a worker thread so queries
+    # keep serving generation g while g+1 prepares.
+    stream: bool = False
+    staleness_budget: int = 0
+    stream_slack: float = 0.5
+    stream_background: bool = False
+
     def __post_init__(self):
         if self.min_batch <= 0 or self.max_batch < self.min_batch:
             raise ValueError(
@@ -82,6 +95,16 @@ class ServeConfig:
                     and p >= 0)):
             raise ValueError(
                 f"bad prune {p!r} ('auto', 'off', or epsilon >= 0)"
+            )
+        if self.staleness_budget < 0:
+            raise ValueError("staleness_budget must be >= 0")
+        if self.stream_slack < 0:
+            raise ValueError("stream_slack must be >= 0")
+        if self.stream and self.backend == "ring":
+            raise ValueError(
+                "streaming estimators support the jnp/pallas backends "
+                "(the ring shards at fit time; re-sharding per append is "
+                "a full refit by construction)"
             )
 
     def row_multiple(self, ring_size: int = 1,

@@ -22,7 +22,8 @@ lazily per (estimator, bucket) and kept in a small LRU:
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence
+from collections import deque
+from typing import Deque, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,10 @@ class ServeEngine:
         self.registry = registry or EstimatorRegistry(config)
         self.cache = ShapeBucketCache(config.cache_buckets)
         self.latency = LatencyRecorder()
+        # generations-behind-live of recent streaming dispatches (staleness
+        # telemetry; a budget of 0 pins this to all-zeros).  Bounded so a
+        # long-lived server doesn't grow it with request count.
+        self.staleness_log: Deque[int] = deque(maxlen=8192)
 
     # -- fit path --------------------------------------------------------
 
@@ -92,27 +97,64 @@ class ServeEngine:
         )
         return split(dens, sizes)
 
+    # -- streaming telemetry ---------------------------------------------
+
+    def staleness_summary(self) -> dict:
+        """p50/p99/max of how many generations behind live each streaming
+        dispatch was served (empty dict when nothing streamed)."""
+        if not self.staleness_log:
+            return {}
+        xs = sorted(self.staleness_log)
+
+        def pct(q):
+            return xs[min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))]
+
+        return {"count": len(xs), "p50": pct(0.5), "p99": pct(0.99),
+                "max": xs[-1]}
+
     # -- internals -------------------------------------------------------
 
     def _dispatch(self, prep: PreparedEstimator, y: jnp.ndarray,
                   precision: Optional[str] = None) -> jnp.ndarray:
         cfg = prep.config
         tier = precision or cfg.precision
+        snap = None
+        if prep.stream is not None:
+            # the staleness gate: get a snapshot at most ``staleness_
+            # budget`` generations behind live (waiting for / performing a
+            # flush only past the budget), then pin the whole dispatch to
+            # it — concurrent appends/evictions publish NEW snapshots and
+            # can never mutate the one in flight
+            snap = prep.stream.ensure(cfg.staleness_budget)
+            self.staleness_log.append(prep.stream.gen - snap.gen)
         top = cfg.bucket_sizes(prep.ring_size, prep.block_m)[-1]
         m = y.shape[0]
         if m <= top:
-            return self._run_bucket(prep, y, tier)
+            return self._run_bucket(prep, y, tier, snap)
         # oversize batch: chunk at the largest bucket (each chunk jit-stable)
         parts = [
-            self._run_bucket(prep, y[off:off + top], tier)
+            self._run_bucket(prep, y[off:off + top], tier, snap)
             for off in range(0, m, top)
         ]
         return jnp.concatenate(parts)
 
     def _run_bucket(self, prep: PreparedEstimator, y: jnp.ndarray,
-                    tier: str):
+                    tier: str, snap=None):
         cfg = prep.config
         bucket = cfg.bucket_for(y.shape[0], prep.ring_size, prep.block_m)
+        if prep.stream is not None:
+            # Streaming executables read train tensors from the pinned
+            # snapshot per call, so value-only generation bumps reuse the
+            # compiled program untouched; the layout epoch joins the key
+            # because only a rebuild changes the column *shapes* — that is
+            # the one event that actually invalidates an executable.
+            fn = self.cache.get_or_build(
+                (prep.key, prep.generation, "stream", snap.layout_epoch,
+                 tier, bucket),
+                lambda: self._build_stream_executable(prep, tier),
+            )
+            return fn(pad_queries(y, bucket), y.shape[0],
+                      snap)[: y.shape[0]]
         # Keyed on the fit generation: a refit (or evict + re-register)
         # produces a new generation, so stale executables can never serve
         # it.  The tier is part of the key — each precision gets its own
@@ -122,6 +164,60 @@ class ServeEngine:
             lambda: self._build_executable(prep, tier),
         )
         return fn(pad_queries(y, bucket), y.shape[0])[: y.shape[0]]
+
+    def _build_stream_executable(self, prep: PreparedEstimator, tier: str):
+        """Bucket executable for a streaming estimator: fn(yp, n_real, snap).
+
+        Unlike the static path, no train tensor is closed over — each call
+        reads the snapshot its dispatch is pinned to.  Normalization uses
+        the snapshot's live count (appends/evictions move it), and the
+        prune decision re-resolves per call because the live count drifts
+        across the auto threshold as points come and go.
+        """
+        cfg = prep.config
+        laplace = cfg.method == "laplace"
+
+        if cfg.backend == "pallas":
+            from repro.kernels import ops
+
+            jfn = jax.jit(lambda yp, xt, nrm_x, xt_lo: ops.flash_kde_prepared(
+                yp, xt, nrm_x, prep.h, xt_lo,
+                precision=tier,
+                block_m=prep.block_m, block_n=prep.block_n,
+                interpret=cfg.interpret, laplace=laplace,
+            ))
+
+            def fn(yp, n_real, snap):
+                cols = prep.stream.columns_for(tier, snap)
+                eps = ops.resolve_prune(cfg.prune, snap.n_live,
+                                        prep.block_n)
+                if eps is not None and cols.meta is not None:
+                    sums = ops.flash_kde_prepared(
+                        yp, cols.xt, cols.nrm_x, prep.h, cols.xt_lo,
+                        precision=tier,
+                        block_m=prep.block_m, block_n=prep.block_n,
+                        interpret=cfg.interpret, laplace=laplace,
+                        prune=cfg.prune, columns=cols, n_real=n_real,
+                    )
+                else:
+                    sums = jfn(yp, cols.xt, cols.nrm_x, cols.xt_lo)
+                return sums / snap.norm
+
+            return fn
+
+        from repro.core import kde as ref
+
+        eval_fn = ref.laplace_kde_eval if laplace else ref.kde_eval
+        jfn = jax.jit(
+            lambda yp, pts: eval_fn(pts, yp, prep.h, block=cfg.block)
+        )
+        # snap.xp is the live set padded to a pow2 row bucket (bounded
+        # retraces across generations); sentinel rows contribute exactly
+        # 0.0 to the sums but inflate eval_fn's 1/n normalization, so
+        # rescale padded-n back to the live count
+        return lambda yp, n_real, snap: jfn(yp, snap.xp) * (
+            snap.xp.shape[0] / snap.n_live
+        )
 
     def _build_executable(self, prep: PreparedEstimator, tier: str):
         """Bucket executable: padded (bucket, d) queries → (bucket,) dens.

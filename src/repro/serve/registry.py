@@ -45,6 +45,9 @@ class PreparedEstimator:
     # ring backend: device mesh + row-sharded (padded) points
     mesh: object = None
     x_sharded: Optional[jnp.ndarray] = None
+    # streaming (config.stream): the incrementally maintained live state;
+    # all prepared-state accessors delegate to its published snapshot
+    stream: object = None
     _columns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
@@ -62,6 +65,8 @@ class PreparedEstimator:
         once at fit), so their tile layouts — and the engine's bucket
         executables — agree across tiers.
         """
+        if self.stream is not None:
+            return self.stream.columns_for(precision)
         if precision not in self._columns:
             from repro.kernels import ops
 
@@ -133,6 +138,32 @@ class EstimatorRegistry:
     def evict(self, key: str) -> None:
         self._store.pop(key, None)
 
+    # -- streaming updates (config.stream estimators) --------------------
+
+    def _stream_of(self, key: str):
+        prep = self.get(key)
+        if prep.stream is None:
+            raise ValueError(
+                f"estimator {key!r} is not streaming (register it with "
+                "ServeConfig(stream=True) to append/evict points)"
+            )
+        return prep.stream
+
+    def append(self, key: str, xs):
+        """Fold new train points into a streaming estimator — the O(n·b·d)
+        delta pass, never the O(n²·d) refit.  Returns the assigned ids."""
+        return self._stream_of(key).append(xs)
+
+    def evict_ids(self, key: str, ids) -> int:
+        """Remove train points (by the ids ``append`` returned) from a
+        streaming estimator.  Not to be confused with ``evict(key)``,
+        which drops a whole registered estimator."""
+        return self._stream_of(key).evict(ids)
+
+    def slide(self, key: str, xs):
+        """Sliding-window update: append ``xs``, evict the oldest as many."""
+        return self._stream_of(key).slide(xs)
+
     def fit(
         self,
         key: str,
@@ -163,6 +194,9 @@ class EstimatorRegistry:
             )
         h = float(h)
 
+        if cfg.stream:
+            return self._prepare_stream(key, x, h, cfg)
+
         points = self._debias(x, h, cfg) if cfg.method == "sdkde" else x
         prep = PreparedEstimator(
             key=key, config=cfg, h=h, n_true=n, d=d,
@@ -171,21 +205,9 @@ class EstimatorRegistry:
         )
 
         if cfg.backend == "pallas":
-            from repro.kernels import autotune, ops
+            from repro.kernels import ops
 
-            # Resolve "auto" tiles once per fit: rows = the largest shape
-            # bucket this estimator will ever dispatch, cols = the train
-            # count.  The resolved tiles shape the bucket ladder AND the
-            # prepared column padding, so they live on the estimator.
-            # vmem_itemsize=4 gates feasibility at the widest operand tier
-            # (f32 / bf16x2), because per-request precision overrides reuse
-            # this one tile across every tier.
-            prep.block_m, prep.block_n = autotune.resolve_blocks(
-                cfg.block_m, cfg.block_n, rows=cfg.max_batch, cols=n, d=d,
-                out_width=1, precision=cfg.precision,
-                measure=False if cfg.interpret else None,
-                vmem_itemsize=4, pruned=cfg.prune != "off",
-            )
+            prep.block_m, prep.block_n = self._resolve_fit_blocks(cfg, n, d)
             clustered = ops.resolve_prune(
                 cfg.prune, n, prep.block_n
             ) is not None
@@ -198,6 +220,55 @@ class EstimatorRegistry:
 
             prep.mesh = ring.default_mesh()
             prep.x_sharded = ring.shard_points(points, prep.mesh, ("data",))
+        return prep
+
+    @staticmethod
+    def _resolve_fit_blocks(cfg: ServeConfig, n: int, d: int):
+        """Resolve "auto" launch tiles once per fit: rows = the largest
+        shape bucket this estimator will ever dispatch, cols = the train
+        count.  The resolved tiles shape the bucket ladder AND the
+        prepared column padding, so they live on the estimator.
+        vmem_itemsize=4 gates feasibility at the widest operand tier
+        (f32 / bf16x2), because per-request precision overrides reuse
+        this one tile across every tier."""
+        from repro.kernels import autotune
+
+        return autotune.resolve_blocks(
+            cfg.block_m, cfg.block_n, rows=cfg.max_batch, cols=n, d=d,
+            out_width=1, precision=cfg.precision,
+            measure=False if cfg.interpret else None,
+            vmem_itemsize=4, pruned=cfg.prune != "off",
+        )
+
+    def _prepare_stream(
+        self, key: str, x: jnp.ndarray, h: float, cfg: ServeConfig
+    ) -> PreparedEstimator:
+        """Fit a streaming estimator: the one full score pass happens in
+        the stream's constructor; every later ``append``/``evict_ids`` is
+        an O(n·b·d) delta against this state."""
+        from repro.stream import StreamConfig, StreamingSDKDE
+
+        n, d = x.shape
+        prep = PreparedEstimator(
+            key=key, config=cfg, h=h, n_true=n, d=d,
+            generation=self.n_fits, points=x,
+            norm=n * gaussian_norm_const(d, 1.0) * h**d,
+        )
+        block_n = 512
+        if cfg.backend == "pallas":
+            prep.block_m, prep.block_n = self._resolve_fit_blocks(cfg, n, d)
+            block_n = prep.block_n
+        prep.stream = StreamingSDKDE(
+            x, h, method=cfg.method, score_h=cfg.score_h,
+            backend=cfg.backend, block_n=block_n,
+            precision=cfg.precision,
+            config=StreamConfig(
+                slack=cfg.stream_slack,
+                staleness_budget=cfg.staleness_budget,
+                background=cfg.stream_background,
+            ),
+        )
+        prep.points = prep.stream.snapshot().points
         return prep
 
     def _debias(self, x: jnp.ndarray, h: float, cfg: ServeConfig):

@@ -1,0 +1,109 @@
+"""Streaming configuration and the rebuild policy.
+
+A streaming estimator degrades as it drifts from its last full build:
+appends pile into nearest-centroid clusters (inflating covering radii and
+with them every certified pruning bound), evictions hollow tiles out, and
+eventually some cluster's slack slots run dry.  ``StreamConfig`` sets the
+budgets; ``RebuildPolicy`` turns the drift counters into a single
+"re-cluster now" decision with a human-readable reason (surfaced in
+telemetry and tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static knobs of a streaming estimator (hashable, like ServeConfig).
+
+    ``slack`` is the per-cluster append headroom fraction reserved at every
+    (re)build — ``ceil(cluster_size · slack)`` extra sentinel slots before
+    block rounding (``kernels.spatial.cluster_capacities``).  ``staleness_
+    budget`` is how many applied-but-unpublished update generations a query
+    may be served across before the engine must publish a fresh snapshot;
+    0 = always fresh.  ``background=True`` publishes snapshots on a worker
+    thread so queries keep serving generation ``g`` while ``g+1`` builds.
+    """
+
+    slack: float = 0.5              # per-cluster append headroom fraction
+    staleness_budget: int = 0       # generations a query may lag (0 = fresh)
+    background: bool = False        # build snapshots on a worker thread
+    delta_block: int = 4096         # GEMM chunk of the delta score pass
+    # rebuild policy budgets (fractions of the live-set size at last build)
+    max_append_frac: float = 0.5
+    max_evict_frac: float = 0.5
+    #: Rebuild when the mean covering radius of non-empty tiles exceeds
+    #: this multiple of its value at the last build — radius inflation is
+    #: exactly what loosens every certified pruning bound, so this is the
+    #: "certified error drifted past the epsilon budget" trigger.
+    max_radius_inflation: float = 2.0
+
+    def __post_init__(self):
+        if self.slack < 0:
+            raise ValueError(f"slack must be >= 0, got {self.slack}")
+        if self.staleness_budget < 0:
+            raise ValueError("staleness_budget must be >= 0")
+        if self.delta_block < 1:
+            raise ValueError("delta_block must be >= 1")
+        for f in ("max_append_frac", "max_evict_frac"):
+            if getattr(self, f) <= 0:
+                raise ValueError(f"{f} must be > 0")
+        if self.max_radius_inflation <= 1.0:
+            raise ValueError("max_radius_inflation must be > 1")
+
+
+class RebuildPolicy:
+    """Decides when incremental maintenance must give way to a full build.
+
+    Tracks drift since the last re-cluster; ``reason()`` returns why a
+    rebuild is due (``None`` = keep streaming).  Slack overflow is sticky:
+    once an append found no free slot the layout *cannot* represent the
+    live set and the next snapshot must rebuild regardless of budgets.
+    """
+
+    def __init__(self, config: StreamConfig):
+        self.config = config
+        self.reset(0)
+
+    def reset(self, base_size: int) -> None:
+        self.base_size = max(int(base_size), 1)
+        self.appends = 0
+        self.evicts = 0
+        self.base_mean_radius: Optional[float] = None
+        self.overflowed = False
+
+    def note_append(self, count: int) -> None:
+        self.appends += int(count)
+
+    def note_evict(self, count: int) -> None:
+        self.evicts += int(count)
+
+    def note_overflow(self) -> None:
+        self.overflowed = True
+
+    def note_mean_radius(self, mean_radius: float) -> Optional[str]:
+        """Feed the post-refresh tile geometry; returns a drift reason."""
+        if self.base_mean_radius is None:
+            self.base_mean_radius = float(mean_radius)
+            return None
+        if (self.base_mean_radius > 0.0
+                and mean_radius > self.config.max_radius_inflation
+                * self.base_mean_radius):
+            return "radius-drift"
+        return None
+
+    def reason(self) -> Optional[str]:
+        cfg = self.config
+        if self.overflowed:
+            return "slack-overflow"
+        if self.appends > cfg.max_append_frac * self.base_size:
+            return "append-budget"
+        if self.evicts > cfg.max_evict_frac * self.base_size:
+            return "evict-budget"
+        return None
+
+
+__all__ = ["StreamConfig", "RebuildPolicy"]

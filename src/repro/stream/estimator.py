@@ -1,0 +1,505 @@
+"""Incremental SD-KDE: append / evict / sliding-window without a refit.
+
+A ``StreamingSDKDE`` holds a *live set* of train points whose score
+statistics (S0, S1) are maintained incrementally (``stream.delta``): an
+append or eviction costs one O(n·b·d) cross GEMM instead of the O(n²·d)
+debias pass a from-scratch refit pays, and the debiased positions of every
+live point are recomputed from the maintained statistics — so after any
+interleaving of updates the served densities match a full refit to float
+tolerance (tested at 1e-5 relative).
+
+The Pallas serving layout is maintained in place between *rebuilds*:
+
+  * appends are assigned to the existing clusters (``spatial.assign``) and
+    claim per-cluster **slack slots** reserved inside the sentinel-padded
+    layout (``spatial.cluster_capacities(slack=…)``) — the layout's shape,
+    and with it every compiled bucket executable, survives the update;
+  * evictions turn their slots back into sentinels;
+  * only the **dirty tiles** — tiles holding appended/evicted slots or
+    points whose statistics actually changed (a far-away append changes
+    nothing: its kernel weight underflows to exactly 0.0) — have their
+    operand columns re-cast and their metadata recomputed
+    (``ops.update_train_columns``); clean tiles carry over bit-for-bit,
+    so certified pruning bounds stay exactly as valid as at the last
+    full build.
+
+Updates are folded into serving via **generations**: every ``append`` /
+``evict`` bumps ``gen``; ``flush`` publishes an immutable
+``StreamSnapshot`` of the current generation (optionally on a worker
+thread, so queries keep serving generation ``g`` while ``g+1`` builds);
+``ensure(budget)`` is the serving engine's staleness gate.  A
+``RebuildPolicy`` (``stream.config``) triggers a full re-cluster when
+slack overflows or the tile geometry drifts past its budgets.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bandwidth import gaussian_norm_const
+from repro.kernels import ops, spatial
+from repro.stream import delta
+from repro.stream.config import RebuildPolicy, StreamConfig
+
+PAD_VALUE = ops.PAD_VALUE
+
+
+class StreamSnapshot(NamedTuple):
+    """An immutable published generation: everything a query dispatch
+    reads.  Snapshots are replaced wholesale (never mutated), so a query
+    holding one is race-free against concurrent appends/evictions — the
+    in-flight dispatch finishes against the generation it started with.
+    ``columns`` is lazily extended per precision tier under the stream's
+    lock; existing entries are never rewritten."""
+
+    gen: int
+    layout_epoch: int
+    n_live: int
+    norm: float                       # n_live · (2π)^{d/2} · h^d
+    points: jnp.ndarray               # (n_live, d) f32 debiased live points
+    xp: Optional[jnp.ndarray]         # padded layout points (pallas)
+    real: Optional[jnp.ndarray]       # (total,) bool (pallas)
+    index: Optional[spatial.SpatialIndex]
+    columns: Dict[str, ops.TrainColumns]
+    affected_tiles: int               # tiles refreshed by this flush
+    total_tiles: int
+
+
+class StreamingSDKDE:
+    """Incrementally maintained KDE / SD-KDE / Laplace-KDE train state.
+
+    ``method="sdkde"`` pays one full O(n²·d) score pass at construction
+    (the same pass a static fit pays) and never again; ``"kde"`` /
+    ``"laplace"`` need no statistics, so only the layout machinery runs.
+    ``backend="pallas"`` maintains the cluster-aligned serving layout;
+    ``"jnp"`` maintains just the live debiased points.
+    """
+
+    def __init__(
+        self,
+        x0,
+        h: float,
+        *,
+        method: str = "sdkde",
+        score_h: Optional[float] = None,
+        backend: str = "pallas",
+        block_n: int = 512,
+        precision: str = "f32",
+        config: StreamConfig | None = None,
+        seed: int = 0,
+    ):
+        if backend not in ("pallas", "jnp"):
+            raise ValueError(
+                f"streaming supports the pallas/jnp backends, not {backend!r}"
+            )
+        if method not in ("kde", "sdkde", "laplace"):
+            raise ValueError(f"unknown method {method!r}")
+        x0 = np.atleast_2d(np.asarray(x0, np.float32))
+        if x0.shape[0] < 1:
+            raise ValueError("streaming estimator needs >= 1 initial point")
+        self.config = config or StreamConfig()
+        self.method = method
+        self.backend = backend
+        self.block_n = int(block_n)
+        self.precision = precision
+        self.h = float(h)
+        self.sh = float(score_h) if score_h is not None else float(h)
+        self.seed = int(seed)
+        self.d = x0.shape[1]
+
+        self.x = x0.copy()                       # original (pre-shift) coords
+        self.ids = np.arange(x0.shape[0], dtype=np.int64)
+        self.next_id = x0.shape[0]
+        if method == "sdkde":
+            self.s0, self.s1 = delta.initial_stats(
+                self.x, self.sh, block=self.config.delta_block
+            )
+        else:
+            self.s0 = self.s1 = None
+
+        self.gen = 0
+        self.layout_epoch = 0
+        self.rebuilds = 0
+        self.last_rebuild_reason: Optional[str] = None
+        self.policy = RebuildPolicy(self.config)
+        self.policy.reset(x0.shape[0])
+        self._tiers = {precision}
+        self._dirty = np.zeros(self.x.shape[0], bool)   # rows to re-scatter
+        self._dirty_tiles: set = set()                  # evicted slots' tiles
+        self._lock = threading.RLock()
+        self._worker: Optional[threading.Thread] = None
+
+        # pallas layout state (None on the jnp backend)
+        self._index: Optional[spatial.SpatialIndex] = None
+        self._labels = self._slots = None
+        self._starts = self._caps = None
+        self._xp = self._real = None
+
+        self._snapshot: Optional[StreamSnapshot] = None
+        self._flush_sync()                       # publish generation 0
+
+    # -- properties ------------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def staleness(self) -> int:
+        """Applied-but-unpublished update generations."""
+        snap = self._snapshot
+        return self.gen - (snap.gen if snap is not None else -1)
+
+    def snapshot(self) -> StreamSnapshot:
+        """The currently published generation (possibly stale)."""
+        return self._snapshot
+
+    # -- updates ---------------------------------------------------------
+
+    def append(self, xs) -> np.ndarray:
+        """Fold new points into the live set; returns their assigned ids.
+
+        O(n·b·d): one delta score pass (sdkde), a nearest-centroid cluster
+        assignment, and slack-slot placement.  The published snapshot is
+        untouched — call ``flush()`` (or let the engine's staleness gate
+        do it) to serve the new generation.
+        """
+        xs = np.atleast_2d(np.asarray(xs, np.float32))
+        if xs.shape[1] != self.d:
+            raise ValueError(f"append dim {xs.shape[1]} != {self.d}")
+        b = xs.shape[0]
+        with self._lock:
+            if self.method == "sdkde":
+                ds0, ds1, s0n, s1n = delta.append_delta(
+                    self.x, xs, self.sh, block=self.config.delta_block
+                )
+                changed = ds0 != 0.0
+                self.s0 = np.concatenate([self.s0 + ds0, s0n])
+                self.s1 = np.concatenate([self.s1 + ds1, s1n])
+                new_sd = delta.apply_shift(
+                    xs, s0n, s1n, self.h, self.sh
+                ).astype(np.float32)
+            else:
+                changed = np.zeros(self.n_live, bool)
+                new_sd = xs
+            new_ids = np.arange(self.next_id, self.next_id + b,
+                                dtype=np.int64)
+            self.next_id += b
+            self.x = np.concatenate([self.x, xs])
+            self.ids = np.concatenate([self.ids, new_ids])
+            self._dirty = np.concatenate(
+                [self._dirty | changed, np.ones(b, bool)]
+            )
+            if self.backend == "pallas":
+                labels_new = np.asarray(
+                    spatial.assign(jnp.asarray(new_sd), self._index)
+                ).astype(np.int64)
+                self._labels = np.concatenate([self._labels, labels_new])
+                slots_new = None
+                if not self.policy.overflowed:
+                    slots_new = spatial.place_points(
+                        self._real, labels_new, self._starts, self._caps
+                    )
+                if slots_new is None:
+                    # slack overflow: the layout can no longer hold the
+                    # live set; park the rows and force a rebuild at the
+                    # next flush
+                    self.policy.note_overflow()
+                    self._slots = np.concatenate(
+                        [self._slots, np.full(b, -1, np.int64)]
+                    )
+                else:
+                    self._real[slots_new] = True
+                    self._slots = np.concatenate(
+                        [self._slots, slots_new.astype(np.int64)]
+                    )
+            self.gen += 1
+            self.policy.note_append(b)
+        self._maybe_background()
+        return new_ids
+
+    def evict(self, ids) -> int:
+        """Remove points by id; returns the number evicted.
+
+        O(n·e·d): one delta pass subtracts the evicted points'
+        contributions from every kept statistic; their slots revert to
+        sentinels in place (the layout shape is untouched).
+        """
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        with self._lock:
+            out = np.isin(self.ids, ids)
+            if out.sum() != ids.shape[0]:
+                missing = np.setdiff1d(ids, self.ids)
+                raise KeyError(f"ids not live: {missing[:8].tolist()}")
+            if out.all():
+                raise ValueError("cannot evict every live point")
+            keep = ~out
+            if self.method == "sdkde":
+                ds0, ds1 = delta.evict_delta(
+                    self.x[keep], self.x[out], self.sh,
+                    block=self.config.delta_block,
+                )
+                changed = ds0 != 0.0
+                self.s0 = self.s0[keep] - ds0
+                self.s1 = self.s1[keep] - ds1
+            else:
+                changed = np.zeros(int(keep.sum()), bool)
+            if self.backend == "pallas":
+                slots_out = self._slots[out]
+                placed = slots_out >= 0
+                self._real[slots_out[placed]] = False
+                self._xp[slots_out[placed]] = PAD_VALUE
+                self._dirty_tiles.update(
+                    (slots_out[placed] // self.block_n).tolist()
+                )
+                self._slots = self._slots[keep]
+                self._labels = self._labels[keep]
+            self.x = self.x[keep]
+            self.ids = self.ids[keep]
+            self._dirty = self._dirty[keep] | changed
+            self.gen += 1
+            self.policy.note_evict(int(out.sum()))
+        self._maybe_background()
+        return int(out.sum())
+
+    def slide(self, xs) -> np.ndarray:
+        """Sliding-window update: append ``xs``, evict the oldest as many.
+
+        Live ids are monotone, so the oldest points are the smallest ids.
+        """
+        xs = np.atleast_2d(np.asarray(xs, np.float32))
+        with self._lock:
+            new_ids = self.append(xs)
+            self.evict(self.ids[: xs.shape[0]])
+        return new_ids
+
+    # -- publishing ------------------------------------------------------
+
+    def flush(self, wait: bool = True) -> StreamSnapshot:
+        """Publish a snapshot of the current generation.
+
+        ``wait=False`` with ``config.background`` starts the build on a
+        worker thread and returns the (stale) published snapshot — the
+        "serve g while g+1 prepares" mode.
+        """
+        if not wait and self.config.background:
+            with self._lock:
+                snap = self._snapshot
+                if snap.gen == self.gen:
+                    return snap
+                if self._worker is None or not self._worker.is_alive():
+                    self._worker = threading.Thread(
+                        target=self._flush_sync, daemon=True
+                    )
+                    self._worker.start()
+                return snap
+        return self._flush_sync()
+
+    def ensure(self, budget: Optional[int] = None) -> StreamSnapshot:
+        """The serving gate: a snapshot no more than ``budget`` generations
+        stale (default: ``config.staleness_budget``), waiting for or
+        performing a flush only when the budget is exceeded."""
+        budget = self.config.staleness_budget if budget is None else budget
+        snap = self._snapshot
+        if self.gen - snap.gen <= budget:
+            return snap
+        worker = self._worker
+        if worker is not None and worker.is_alive():
+            worker.join()
+            snap = self._snapshot
+            if self.gen - snap.gen <= budget:
+                return snap
+        return self._flush_sync()
+
+    def columns_for(self, tier: str,
+                    snap: Optional[StreamSnapshot] = None
+                    ) -> ops.TrainColumns:
+        """Prepared train columns of a snapshot at one tier (built lazily
+        on first use, then refreshed incrementally at every flush).
+
+        Pass the ``snap`` an in-flight dispatch is pinned to so a
+        concurrent flush/evict can never swap train tensors mid-query;
+        default is the currently published snapshot."""
+        if snap is None:
+            snap = self._snapshot
+        cols = snap.columns.get(tier)
+        if cols is not None:
+            return cols
+        with self._lock:
+            if tier not in snap.columns:
+                self._tiers.add(tier)
+                snap.columns[tier] = ops.columns_from_layout(
+                    snap.xp, snap.real, snap.index,
+                    block_n=self.block_n, precision=tier,
+                )
+            return snap.columns[tier]
+
+    # -- internals -------------------------------------------------------
+
+    def _maybe_background(self) -> None:
+        if self.config.background:
+            self.flush(wait=False)
+
+    def _flush_sync(self) -> StreamSnapshot:
+        with self._lock:
+            snap = self._snapshot
+            if snap is not None and snap.gen == self.gen:
+                return snap
+            snap = self._build_snapshot()
+            self._snapshot = snap
+            return snap
+
+    def _shifted(self) -> np.ndarray:
+        if self.method == "sdkde":
+            return delta.apply_shift(
+                self.x, self.s0, self.s1, self.h, self.sh
+            ).astype(np.float32)
+        return self.x
+
+    def _build_snapshot(self) -> StreamSnapshot:
+        x_sd = self._shifted()
+        n = x_sd.shape[0]
+        norm = n * gaussian_norm_const(self.d, 1.0) * self.h ** self.d
+        if self.backend != "pallas":
+            # jnp path: publish the live points sentinel-padded to a pow2
+            # row bucket (``xp``), so the engine's jitted executable sees
+            # a bounded set of shapes across generations instead of one
+            # retrace per net append/evict
+            total = max(256, 1 << int(n - 1).bit_length())
+            xp = np.full((total, self.d), PAD_VALUE, np.float32)
+            xp[:n] = x_sd
+            return StreamSnapshot(
+                self.gen, self.layout_epoch, n, norm, jnp.asarray(x_sd),
+                jnp.asarray(xp), None, None, {}, 0, 0,
+            )
+
+        reason = (self.policy.reason()
+                  if self._index is not None else "initial")
+        if reason is not None:
+            return self._publish_rebuilt(x_sd, norm, reason)
+
+        # incremental path: re-scatter only the dirty rows, refresh only
+        # the affected tiles' columns/metadata
+        dirty_slots = self._slots[self._dirty]
+        self._xp[dirty_slots] = x_sd[self._dirty]
+        tiles = set((dirty_slots // self.block_n).tolist())
+        tiles |= self._dirty_tiles
+        total_tiles = self._xp.shape[0] // self.block_n
+        prev = self._snapshot.columns
+        xp_j = jnp.asarray(self._xp)
+        real_j = jnp.asarray(self._real)
+        if len(tiles) >= max(1, total_tiles // 2):
+            cols = {t: ops.columns_from_layout(
+                xp_j, real_j, self._index,
+                block_n=self.block_n, precision=t,
+            ) for t in self._tiers}
+        else:
+            tidx = _pow2_pad(np.fromiter(sorted(tiles), np.int64,
+                                         len(tiles)))
+            cols = {
+                t: (ops.update_train_columns(
+                        prev[t], xp_j, real_j, tidx, precision=t)
+                    if t in prev else
+                    ops.columns_from_layout(
+                        xp_j, real_j, self._index,
+                        block_n=self.block_n, precision=t))
+                for t in self._tiers
+            }
+        drift = self.policy.note_mean_radius(
+            _mean_tile_radius(cols[self.precision].meta)
+        )
+        if drift is not None:
+            return self._publish_rebuilt(x_sd, norm, drift)
+        self._dirty[:] = False
+        self._dirty_tiles = set()
+        return StreamSnapshot(
+            self.gen, self.layout_epoch, n, norm, jnp.asarray(x_sd),
+            xp_j, real_j, self._index, cols, len(tiles), total_tiles,
+        )
+
+    def _publish_rebuilt(self, x_sd: np.ndarray, norm: float,
+                         reason: str) -> StreamSnapshot:
+        self._rebuild_layout(x_sd)
+        if reason != "initial":
+            self.rebuilds += 1
+            self.last_rebuild_reason = reason
+        xp_j = jnp.asarray(self._xp)
+        real_j = jnp.asarray(self._real)
+        cols = {t: ops.columns_from_layout(
+            xp_j, real_j, self._index, block_n=self.block_n, precision=t,
+        ) for t in self._tiers}
+        self.policy.note_mean_radius(
+            _mean_tile_radius(cols[self.precision].meta)
+        )
+        total_tiles = self._xp.shape[0] // self.block_n
+        return StreamSnapshot(
+            self.gen, self.layout_epoch, x_sd.shape[0], norm,
+            jnp.asarray(x_sd), xp_j, real_j, self._index, cols,
+            total_tiles, total_tiles,
+        )
+
+    def _rebuild_layout(self, x_sd: np.ndarray) -> None:
+        """Full re-cluster + re-scatter: the one non-incremental step.
+
+        The scatter is kept in mutable numpy (appends/evictions write rows
+        in place between rebuilds) but shares the slab geometry helpers —
+        ``cluster_capacities``/``cluster_slots`` — with the static
+        ``spatial.cluster_layout`` path, so the cluster-alignment
+        invariant has one owner.  Slabs are sized for EVERY centroid of
+        the index, not just the labels the train points happen to use:
+        k-means can leave a trailing cluster empty, and a later append
+        assigned to it still needs a slab to land in.
+        """
+        self._index = spatial.build_index(
+            jnp.asarray(x_sd), seed=self.seed + self.layout_epoch
+        )
+        labels = np.asarray(self._index.labels).astype(np.int64)
+        self._labels = labels
+        k_full = (int(self._index.centroids.shape[0])
+                  if self._index.centroids is not None
+                  else int(labels.max()) + 1)
+        self._starts, self._caps = spatial.cluster_capacities(
+            labels, self.block_n, slack=self.config.slack,
+            n_clusters=k_full,
+        )
+        # slots only cover observed labels; their slab starts agree with
+        # the full-k geometry because empty-cluster slabs append after
+        slots = spatial.cluster_slots(
+            labels, self.block_n, slack=self.config.slack
+        ).astype(np.int64)
+        total = max(int(self._caps.sum()), self.block_n)
+        xp = np.full((total, self.d), PAD_VALUE, np.float32)
+        xp[slots] = x_sd
+        real = np.zeros(total, bool)
+        real[slots] = True
+        self._slots, self._xp, self._real = slots, xp, real
+        self.layout_epoch += 1
+        self.policy.reset(x_sd.shape[0])
+        self._dirty[:] = False
+        self._dirty_tiles = set()
+
+
+def _pow2_pad(idx: np.ndarray) -> np.ndarray:
+    """Pad a tile-index list to the next power of two with repeats of its
+    first entry — repeated writes are idempotent, and the bounded shape
+    set keeps XLA retraces of the update path bounded."""
+    if idx.size == 0:
+        return idx
+    k = 1 << int(idx.size - 1).bit_length()
+    return np.concatenate([idx, np.full(k - idx.size, idx[0], idx.dtype)])
+
+
+def _mean_tile_radius(meta: Optional[spatial.TileMeta]) -> float:
+    if meta is None:
+        return 0.0
+    radii = np.asarray(meta.radii)
+    counts = np.asarray(meta.counts)
+    live = counts > 0
+    return float(radii[live].mean()) if live.any() else 0.0
+
+
+__all__ = ["StreamSnapshot", "StreamingSDKDE"]

@@ -1,0 +1,89 @@
+"""benchmarks/run.py failure semantics + the regression gate logic."""
+
+import json
+import subprocess
+import sys
+
+from benchmarks import check_regression
+
+
+def _doc(cells, **meta):
+    return {"meta": meta, "cells": cells}
+
+
+def test_gate_passes_within_tolerance():
+    base = _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 10.0}])
+    cur = _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 9.0}])
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert not failures and rows[0][3]
+
+
+def test_gate_fails_on_regress_and_missing_cell():
+    base = _doc([
+        {"cell": "pruning", "n": 64, "modeled_speedup": 10.0},
+        {"cell": "precision_model", "n": 32, "modeled_speedup": 1.3},
+    ])
+    cur = _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 8.0}])
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert len(failures) == 2            # regressed + missing
+    assert not rows[0][3] and rows[1][2] is None
+
+
+def test_gate_fails_on_recorded_harness_failures():
+    base = _doc([])
+    cur = _doc([], failed_harnesses="fig1")
+    _, failures = check_regression.check(cur, base, 0.15)
+    assert failures and "fig1" in failures[0]
+
+
+def test_gate_ignores_ungated_cells():
+    base = _doc([{"cell": "serve", "n": 64, "qps": 100.0}])
+    cur = _doc([{"cell": "serve", "n": 64, "qps": 1.0}])
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert not rows and not failures
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(
+        _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 10.0}])))
+    cur.write_text(json.dumps(
+        _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 9.9}])))
+    assert check_regression.main(
+        ["--current", str(cur), "--baseline", str(base)]) == 0
+    cur.write_text(json.dumps(
+        _doc([{"cell": "pruning", "n": 64, "modeled_speedup": 1.0}])))
+    assert check_regression.main(
+        ["--current", str(cur), "--baseline", str(base)]) == 1
+
+
+def test_run_harness_failure_recorded_and_nonzero(tmp_path):
+    """A raising harness is recorded (emit + FAILURES) without aborting
+    the suite, and the aggregator process exits nonzero."""
+    from benchmarks import common, run
+
+    records_before = len(common.RECORDS)
+    failures_before = list(run.FAILURES)
+    run._run("boom", "always raises", lambda: 1 / 0)
+    try:
+        assert run.FAILURES[-1] == "boom"
+        new = common.RECORDS[records_before:]
+        assert any(r["cell"] == "harness_error" for r in new)
+        harness = [r for r in new if r["cell"] == "harness"][-1]
+        assert harness["ok"] is False
+    finally:
+        del run.FAILURES[:]
+        run.FAILURES.extend(failures_before)
+        del common.RECORDS[records_before:]
+
+    # end-to-end: a tiny aggregator in the same style exits 1 on failure
+    script = (
+        "import sys; sys.path.insert(0, '.');"
+        "from benchmarks import run;"
+        "run._run('boom', 'raises', lambda: 1/0);"
+        "sys.exit(1 if run.FAILURES else 0)"
+    )
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True)
+    assert proc.returncode == 1
