@@ -40,12 +40,19 @@ def cell_key(cell: dict) -> tuple:
 
 
 def check(current: dict, baseline: dict, tolerance: float):
-    """Returns (rows, failures): one row per gated baseline cell."""
+    """Returns (rows, failures): one row per gated baseline cell.
+
+    Only ``modeled_speedup`` cells participate.  Anything else in either
+    document — telemetry cells (``obs_overhead``), the embedded
+    ``metrics`` snapshot, malformed/non-dict cells from a future schema —
+    is ignored rather than an error, so adding observability data to the
+    artifact can never break the gate.
+    """
     cur_cells = {cell_key(c): c for c in current.get("cells", ())
-                 if GATE_FIELD in c}
+                 if isinstance(c, dict) and GATE_FIELD in c}
     rows, failures = [], []
     for b in baseline.get("cells", ()):
-        if GATE_FIELD not in b:
+        if not isinstance(b, dict) or GATE_FIELD not in b:
             continue
         key = cell_key(b)
         floor = float(b[GATE_FIELD]) * (1.0 - tolerance)

@@ -49,8 +49,14 @@ def emit(name: str, **fields):
     print(f"{name},{kv}")
 
 
-def write_bench_json(path: str, **meta) -> None:
-    """Dump every emitted cell (plus run metadata) as one JSON artifact."""
+def write_bench_json(path: str, metrics: Dict | None = None,
+                     **meta) -> None:
+    """Dump every emitted cell (plus run metadata) as one JSON artifact.
+
+    ``metrics`` (an ``obs.metrics_snapshot()`` dict) is embedded as a
+    top-level key — already JSON-safe, kept out of ``meta`` so the
+    regression gate and other meta consumers see only flat scalars.
+    """
     doc = {
         "meta": {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
@@ -61,6 +67,8 @@ def write_bench_json(path: str, **meta) -> None:
         },
         "cells": RECORDS,
     }
+    if metrics is not None:
+        doc["metrics"] = metrics
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

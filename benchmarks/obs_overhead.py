@@ -1,0 +1,74 @@
+"""Observability overhead: serve p50 with telemetry off vs fully on.
+
+The acceptance bar for the obs layer is <=2% added latency on the serve
+hot path.  This harness times ``ServeEngine.query`` *externally* (the
+engine's own LatencyRecorder is bucket-quantized at ~1.47x resolution —
+far too coarse to resolve a 2% delta) on ONE warmed engine, alternating
+obs-off and obs-on passes over the same request schedule so CPU-frequency
+drift and allocator state cancel out of the comparison.  The "on" passes
+run with metrics AND tracing enabled (tracing is off by default in
+production, so this is the worst case, not the default config).
+
+On a shared CPU runner even the paired ratio carries a few percent of
+noise; the cell records the measured ratio for trend tracking, and the CI
+regression gate treats ``obs_overhead`` as informational (it is not a
+speedup cell).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro import obs
+from repro.core.mixtures import mixture_for_dim
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main(n: int = 2048, d: int = 4, n_requests: int = 24,
+         repeats: int = 6) -> None:
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(0)
+    x = mix.sample(key, n)
+    pool = mix.sample(jax.random.fold_in(key, 1), 2048)
+    rng = np.random.default_rng(0)
+    sizes = np.exp(rng.uniform(np.log(4), np.log(512),
+                               n_requests)).astype(int).clip(1)
+    offs = [int(rng.integers(0, pool.shape[0] - m)) for m in sizes]
+
+    eng = ServeEngine(ServeConfig(backend="jnp"))
+    eng.register("obs", x)
+    for m, off in zip(sizes, offs):       # warm every bucket before timing
+        eng.query("obs", pool[off:off + m])
+
+    def pass_lats() -> list:
+        lats = []
+        for m, off in zip(sizes, offs):
+            t0 = time.perf_counter()
+            eng.query("obs", pool[off:off + m])
+            lats.append(time.perf_counter() - t0)
+        return lats
+
+    metrics0, trace0 = obs.state.metrics_on, obs.state.trace_on
+    lats_off, lats_on = [], []
+    try:
+        for _ in range(repeats):          # paired A/B: drift hits both arms
+            obs.configure(metrics=False, trace=False)
+            lats_off += pass_lats()
+            obs.configure(metrics=True, trace=True)
+            lats_on += pass_lats()
+    finally:
+        obs.configure(metrics=metrics0, trace=trace0)
+
+    p50_off = 1e3 * float(np.percentile(lats_off, 50))
+    p50_on = 1e3 * float(np.percentile(lats_on, 50))
+    emit("obs_overhead", n=n, d=d, requests=len(sizes) * repeats,
+         p50_off_ms=round(p50_off, 4), p50_on_ms=round(p50_on, 4),
+         ratio=round(p50_on / p50_off, 4))
+
+
+if __name__ == "__main__":
+    main()

@@ -26,12 +26,14 @@ from benchmarks import (
     fig3_oracle_1d,
     fig4_fusion,
     fig5_utilization,
+    obs_overhead,
     precision_sweep,
     pruning_sweep,
     serve_throughput,
     streaming_throughput,
     table1_methods,
 )
+from repro import obs
 
 BENCH_JSON = "BENCH_flash.json"
 
@@ -86,10 +88,17 @@ def main() -> None:
          "(repro.stream)",
          streaming_throughput.main, smoke_n=2048, smoke_d=8,
          run_acceptance=True)
+    _run("obs_overhead", "serve p50 with telemetry off vs fully on "
+         "(repro.obs; informational, not a speedup cell)",
+         obs_overhead.main)
     total = time.time() - t0
+    # embed the process-wide metrics snapshot the suite itself produced —
+    # cache hit rates, prune occupancies, tuner decisions — so the perf
+    # artifact carries its own telemetry alongside the timing cells
     common.write_bench_json(BENCH_JSON, suite="cpu-scaled",
                             total_s=round(total, 1),
-                            failed_harnesses=",".join(FAILURES) or None)
+                            failed_harnesses=",".join(FAILURES) or None,
+                            metrics=obs.metrics_snapshot())
     print(f"# total {total:.1f}s  → {BENCH_JSON}")
     if FAILURES:
         print(f"# FAILED harnesses: {', '.join(FAILURES)}", file=sys.stderr)

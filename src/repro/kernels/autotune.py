@@ -26,6 +26,7 @@ import math
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro import obs
 from repro.kernels import precision as prec
 from repro.kernels import tuning
 
@@ -202,6 +203,11 @@ def record_occupancy(rows: int, cols: int, d: int, occupancy: float,
     """
     key = (_shape_bucket(rows), _shape_bucket(cols), d)
     occupancy = min(max(float(occupancy), 0.0), 1.0)
+    obs.counter("autotune.occupancy_updates",
+                "occupancy-profile EMA feeds").inc()
+    obs.histogram("autotune.occupancy",
+                  "measured tile-map occupancies fed to the tuner",
+                  lo=1e-3, hi=1.0).observe(occupancy)
     with _LOCK:
         prof = _OCCUPANCY.setdefault(key, {})
         old = prof.get(block_n)
@@ -313,26 +319,48 @@ def autotune_blocks(
            round(occupancy, 2), occupancy_key)
     with _LOCK:
         if key in _CACHE:
+            obs.counter("autotune.cache_hits",
+                        "winner-cache hits (no re-tune)").inc()
             return _CACHE[key]
 
-    cands = shortlist(rows, cols, d, out_width=out_width,
-                      precision=precision, block_ms=block_ms,
-                      block_ns=block_ns, vmem_itemsize=vmem_itemsize,
-                      occupancy=occupancy, occupancy_fn=occupancy_fn)
-    if not cands:
-        raise ValueError(
-            f"no feasible launch config for rows={rows} cols={cols} d={d} "
-            f"precision={precision} under the VMEM budget"
-        )
+    with obs.span("autotune.resolve", rows=rows, cols=cols, d=d,
+                  out_width=out_width, precision=precision) as sp:
+        cands = shortlist(rows, cols, d, out_width=out_width,
+                          precision=precision, block_ms=block_ms,
+                          block_ns=block_ns, vmem_itemsize=vmem_itemsize,
+                          occupancy=occupancy, occupancy_fn=occupancy_fn)
+        if not cands:
+            raise ValueError(
+                f"no feasible launch config for rows={rows} cols={cols} "
+                f"d={d} precision={precision} under the VMEM budget"
+            )
 
-    if measure is None:
-        import jax
+        if measure is None:
+            import jax
 
-        measure = time_fn is not None or jax.default_backend() == "tpu"
-    best = cands[0]
-    if measure and len(cands) > 1:
-        fn = time_fn or _probe_time_fn(rows, cols, d, out_width, precision)
-        best = min(cands[:topk], key=lambda c: fn(c.block_m, c.block_n))
+            measure = time_fn is not None or jax.default_backend() == "tpu"
+        best = cands[0]
+        if measure and len(cands) > 1:
+            fn = time_fn or _probe_time_fn(rows, cols, d, out_width,
+                                           precision)
+
+            def timed(c: TunedConfig) -> float:
+                t = fn(c.block_m, c.block_n)
+                obs.counter("autotune.probes",
+                            "device-timed candidate launches").inc()
+                obs.histogram("autotune.probe_s",
+                              "measured candidate launch times (s)",
+                              lo=1e-6, hi=1e2).observe(t)
+                return t
+
+            best = min(cands[:topk], key=timed)
+        obs.counter(
+            "autotune.resolves", "fresh tuner decisions",
+            labels={"mode": "measured" if measure else "model"},
+        ).inc()
+        sp.set(block_m=best.block_m, block_n=best.block_n,
+               bound=best.bound, measured=bool(measure),
+               candidates=len(cands))
 
     with _LOCK:
         _CACHE[key] = best.blocks

@@ -39,9 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.bandwidth import gaussian_norm_const
 from repro.kernels import autotune, flash_pruned, spatial
 from repro.kernels import precision as prec
+from repro.obs import state as obs_state
 from repro.kernels.flash_kde import flash_kde_pallas
 from repro.kernels.flash_laplace import flash_laplace_pallas, sq_moment_pallas
 from repro.kernels.flash_score import flash_score_pallas
@@ -316,14 +318,42 @@ def _score_stats_pruned(
     _record_occupancy_profile(n, {n}, d, vl.occupancy, block_n, xrec,
                               fine_meta, _inv2h2(h), epsilon, block_m,
                               "score")
-    s1aug = flash_pruned.flash_score_pallas_pruned(
-        vl.counts, vl.tile_map, x_ops[0], nrm, xt_ops[0], xaug_ops[0],
-        _inv2h2(h), x_ops[1], xt_ops[1], xaug_ops[1],
-        block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
-        interpret=interpret,
-    )
+    _note_pruned_launch("score", vl, tm, epsilon)
+    with obs.span("kernels.pruned_score", rows=n,
+                  occupancy=round(vl.occupancy, 4)), \
+            obs.annotate("flash_score_pruned"):
+        s1aug = flash_pruned.flash_score_pallas_pruned(
+            vl.counts, vl.tile_map, x_ops[0], nrm, xt_ops[0], xaug_ops[0],
+            _inv2h2(h), x_ops[1], xt_ops[1], xaug_ops[1],
+            block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
+            interpret=interpret,
+        )
     rows = s1aug[layout.slots]
     return rows[:, d], rows[:, :d]
+
+
+def _note_pruned_launch(kind: str, vl: spatial.VisitLists,
+                        tm: spatial.TileMap, epsilon) -> None:
+    """Record one pruned pass: visit fraction (= 1 − skip rate) and the
+    certified error budget actually spent, so serving telemetry can show
+    how sparse traffic really is and how close certificates run to their
+    epsilon.  The max-reduction over the (tiny) per-row-tile err_bound
+    vector host-syncs, so the whole helper is skipped when metrics are
+    off — this already sits on the pruned path's host-sync boundary."""
+    if not obs_state.metrics_on:
+        return
+    obs.counter("kernels.prune.launches", labels={"kind": kind}).inc()
+    obs.histogram("kernels.prune.visit_fraction",
+                  "column tiles visited / total per pruned pass",
+                  lo=1e-3, hi=1.0).observe(vl.occupancy)
+    err = float(jnp.max(tm.err_bound)) if tm.err_bound.size else 0.0
+    obs.histogram("kernels.prune.cert_budget",
+                  "max certified abs error of the unnormalized "
+                  "accumulator per pruned pass",
+                  lo=1e-30, hi=1.0, per_decade=1).observe(err)
+    obs.gauge("kernels.prune.epsilon",
+              "per-point contribution threshold of the last pruned "
+              "pass").set(float(epsilon))
 
 
 def flash_score_stats(
@@ -793,12 +823,17 @@ def _pruned_eval_sums(
     _record_occupancy_profile(m_in, {n_true, cols.xt.shape[1]}, d,
                               vl.occupancy, block_n, yrec, cols.meta_fine,
                               _inv2h2(h), epsilon, block_m, kind)
-    sums = flash_pruned.flash_kde_pallas_pruned(
-        vl.counts, vl.tile_map, y_hi, nrm_y, cols.xt, cols.nrm_x,
-        _inv2h2(h), y_lo, cols.xt_lo,
-        block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
-        interpret=interpret, laplace=laplace,
-    )
+    _note_pruned_launch(kind, vl, tm, epsilon)
+    with obs.span("kernels.pruned_eval", rows=nr, kind=kind,
+                  occupancy=round(vl.occupancy, 4),
+                  max_visits=vl.max_visits), \
+            obs.annotate("flash_kde_pruned"):
+        sums = flash_pruned.flash_kde_pallas_pruned(
+            vl.counts, vl.tile_map, y_hi, nrm_y, cols.xt, cols.nrm_x,
+            _inv2h2(h), y_lo, cols.xt_lo,
+            block_m=block_m, block_n=block_n, max_visits=vl.max_visits,
+            interpret=interpret, laplace=laplace,
+        )
     out = sums[qlayout.slots, 0]                 # back to request order
     if nr < m_in:                                # caller's sentinel tail
         out = jnp.concatenate([out, jnp.zeros((m_in - nr,), out.dtype)])
@@ -881,10 +916,12 @@ def flash_kde_prepared(
     )
     eps = resolve_prune(prune, n, block_n)
     if eps is None:
-        return _flash_kde_prepared_dense(
-            yp, xt, nrm_x, h, xt_lo, precision=precision, block_m=block_m,
-            block_n=block_n, interpret=interpret, laplace=laplace,
-        )
+        with obs.annotate("flash_kde_prepared_dense"):
+            return _flash_kde_prepared_dense(
+                yp, xt, nrm_x, h, xt_lo, precision=precision,
+                block_m=block_m, block_n=block_n, interpret=interpret,
+                laplace=laplace,
+            )
     if columns is None:
         raise ValueError(
             "flash_kde_prepared(prune=...) needs columns= (the clustered "

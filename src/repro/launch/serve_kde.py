@@ -18,6 +18,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import kde as ref
 from repro.core.mixtures import mixture_for_dim
 from repro.serve import ServeConfig, ServeEngine
@@ -66,7 +67,18 @@ def main():
     ap.add_argument("--updates", type=int, default=16,
                     help="append/evict updates interleaved with the "
                          "traffic (stream mode)")
+    ap.add_argument("--metrics-json", metavar="PATH", default=None,
+                    help="write a telemetry document (metrics snapshot, "
+                         "Prometheus exposition, trace events if --trace) "
+                         "to PATH on exit")
+    ap.add_argument("--trace", action="store_true",
+                    help="record structured spans for every request "
+                         "(repro.obs; also enables jax.profiler "
+                         "annotations on real devices)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.configure(trace=True)
 
     mix = mixture_for_dim(args.d)
     key = jax.random.PRNGKey(args.seed)
@@ -165,6 +177,24 @@ def main():
             got, want, rtol=rtol,
             atol=atol_frac * float(np.max(np.abs(want))))
         print(f"verify: serve path matches jnp reference (rtol {rtol:g})")
+
+    if args.metrics_json:
+        import json
+
+        events = eng.trace_events() if args.trace else []
+        doc = {
+            "args": {k: v for k, v in vars(args).items()
+                     if isinstance(v, (int, float, str, bool, type(None)))},
+            "metrics": eng.metrics(),
+            "prometheus": obs.prometheus_text(),
+            "trace_events": events,
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        n_metrics = len(doc["metrics"]["registry"])
+        print(f"telemetry: {n_metrics} registry metrics"
+              + (f", {len(events)} trace events" if args.trace else "")
+              + f" -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

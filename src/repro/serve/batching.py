@@ -25,6 +25,7 @@ from typing import Callable, Hashable, List, Sequence, Tuple
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.kde import PAD_VALUE, pad_rows  # noqa: F401 - PAD_VALUE is
 # re-exported for serve users building their own padded batches.
 
@@ -91,17 +92,27 @@ class ShapeBucketCache:
         return key in self._entries
 
     def get_or_build(self, key: Hashable, build: Callable[[], Callable]):
-        """Return the cached executable for ``key``, building on miss."""
+        """Return the cached executable for ``key``, building on miss.
+
+        Hits/misses/evictions also feed the process-wide obs counters
+        (``serve.bucket_cache.*``), so a recompile storm — e.g.
+        layout-epoch churn under streaming — is distinguishable from
+        normal traffic in any metrics snapshot, not just on the engine
+        instance that happened to own this cache.
+        """
         if key in self._entries:
             self.hits += 1
+            obs.counter("serve.bucket_cache.hits").inc()
             self._entries.move_to_end(key)
             return self._entries[key]
         self.misses += 1
+        obs.counter("serve.bucket_cache.misses").inc()
         fn = build()
         self._entries[key] = fn
         if len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
             self.evictions += 1
+            obs.counter("serve.bucket_cache.evictions").inc()
         return fn
 
     def invalidate(self, predicate: Callable[[Hashable], bool]) -> None:

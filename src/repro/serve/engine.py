@@ -28,6 +28,7 @@ from typing import Deque, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
 from repro.serve.config import ServeConfig
 from repro.serve.registry import EstimatorRegistry, PreparedEstimator
@@ -78,9 +79,12 @@ class ServeEngine:
         """
         prep = self.registry.get(key)
         y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
-        t0 = time.perf_counter()
-        dens = jax.block_until_ready(self._dispatch(prep, y, precision))
-        self.latency.record(time.perf_counter() - t0, y.shape[0], 1)
+        with obs.span("serve.request", key=key, rows=int(y.shape[0]),
+                      requests=1):
+            t0 = time.perf_counter()
+            dens = jax.block_until_ready(self._dispatch(prep, y, precision))
+            dt = time.perf_counter() - t0
+        self._note_served(dt, y.shape[0], 1)
         return dens
 
     def query_many(
@@ -90,12 +94,45 @@ class ServeEngine:
         """Coalesce several ragged requests into one padded dispatch."""
         prep = self.registry.get(key)
         fused, sizes = coalesce(batches)
-        t0 = time.perf_counter()
-        dens = jax.block_until_ready(self._dispatch(prep, fused, precision))
-        self.latency.record(
-            time.perf_counter() - t0, fused.shape[0], len(sizes)
-        )
+        with obs.span("serve.request", key=key, rows=int(fused.shape[0]),
+                      requests=len(sizes)):
+            t0 = time.perf_counter()
+            dens = jax.block_until_ready(
+                self._dispatch(prep, fused, precision)
+            )
+            dt = time.perf_counter() - t0
+        self._note_served(dt, fused.shape[0], len(sizes))
         return split(dens, sizes)
+
+    def _note_served(self, seconds: float, rows: int, requests: int) -> None:
+        self.latency.record(seconds, rows, requests)
+        obs.counter("serve.requests", "requests admitted").inc(requests)
+        obs.counter("serve.queries", "density rows served").inc(rows)
+
+    # -- telemetry --------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """One JSON-safe view of everything this engine can observe:
+        per-engine latency (bounded histogram), bucket-cache efficiency,
+        streaming staleness, and the process-wide obs registry (kernel
+        prune occupancy, autotune decisions, stream gauges, ...)."""
+        return {
+            "latency": self.latency.summary().as_dict(),
+            "latency_hist": self.latency.histogram_snapshot(),
+            "bucket_cache": {
+                "hits": self.cache.hits,
+                "misses": self.cache.misses,
+                "evictions": self.cache.evictions,
+                "resident": len(self.cache),
+            },
+            "staleness": self.staleness_summary(),
+            "registry": obs.metrics_snapshot(),
+        }
+
+    def trace_events(self) -> list:
+        """The buffered obs span events (enable with
+        ``obs.configure(trace=True)``)."""
+        return obs.trace_events()
 
     # -- streaming telemetry ---------------------------------------------
 
@@ -119,51 +156,83 @@ class ServeEngine:
         cfg = prep.config
         tier = precision or cfg.precision
         snap = None
-        if prep.stream is not None:
-            # the staleness gate: get a snapshot at most ``staleness_
-            # budget`` generations behind live (waiting for / performing a
-            # flush only past the budget), then pin the whole dispatch to
-            # it — concurrent appends/evictions publish NEW snapshots and
-            # can never mutate the one in flight
-            snap = prep.stream.ensure(cfg.staleness_budget)
-            self.staleness_log.append(prep.stream.gen - snap.gen)
-        top = cfg.bucket_sizes(prep.ring_size, prep.block_m)[-1]
-        m = y.shape[0]
-        if m <= top:
-            return self._run_bucket(prep, y, tier, snap)
-        # oversize batch: chunk at the largest bucket (each chunk jit-stable)
-        parts = [
-            self._run_bucket(prep, y[off:off + top], tier, snap)
-            for off in range(0, m, top)
-        ]
-        return jnp.concatenate(parts)
+        sp = obs.span("serve.dispatch", key=prep.key, backend=cfg.backend,
+                      tier=tier, rows=int(y.shape[0]))
+        with sp:
+            if prep.stream is not None:
+                # the staleness gate: get a snapshot at most ``staleness_
+                # budget`` generations behind live (waiting for /
+                # performing a flush only past the budget), then pin the
+                # whole dispatch to it — concurrent appends/evictions
+                # publish NEW snapshots and can never mutate the one in
+                # flight
+                snap = prep.stream.ensure(cfg.staleness_budget)
+                lag = prep.stream.gen - snap.gen
+                self.staleness_log.append(lag)
+                obs.histogram("serve.staleness_gen",
+                              "generations behind live per streaming "
+                              "dispatch", lo=1, hi=1e4,
+                              per_decade=8).observe(lag)
+                sp.set(staleness=lag, stream_gen=snap.gen,
+                       layout_epoch=snap.layout_epoch)
+            top = cfg.bucket_sizes(prep.ring_size, prep.block_m)[-1]
+            m = y.shape[0]
+            if m <= top:
+                return self._run_bucket(prep, y, tier, snap)
+            # oversize batch: chunk at the largest bucket (each chunk
+            # jit-stable)
+            sp.set(chunks=-(-m // top))
+            parts = [
+                self._run_bucket(prep, y[off:off + top], tier, snap)
+                for off in range(0, m, top)
+            ]
+            return jnp.concatenate(parts)
 
     def _run_bucket(self, prep: PreparedEstimator, y: jnp.ndarray,
                     tier: str, snap=None):
         cfg = prep.config
-        bucket = cfg.bucket_for(y.shape[0], prep.ring_size, prep.block_m)
+        m = y.shape[0]
+        bucket = cfg.bucket_for(m, prep.ring_size, prep.block_m)
         if prep.stream is not None:
             # Streaming executables read train tensors from the pinned
             # snapshot per call, so value-only generation bumps reuse the
             # compiled program untouched; the layout epoch joins the key
             # because only a rebuild changes the column *shapes* — that is
             # the one event that actually invalidates an executable.
+            ck = (prep.key, prep.generation, "stream", snap.layout_epoch,
+                  tier, bucket)
+            build = lambda: self._build_stream_executable(prep, tier)  # noqa: E731
+        else:
+            # Keyed on the fit generation: a refit (or evict + re-register)
+            # produces a new generation, so stale executables can never
+            # serve it.  The tier is part of the key — each precision gets
+            # its own bucket executable against its own prepared train
+            # tensors.
+            ck = (prep.key, prep.generation, tier, bucket)
+            build = lambda: self._build_executable(prep, tier)  # noqa: E731
+        hit = ck in self.cache
+        obs.histogram("serve.pad_ratio",
+                      "bucket rows / real rows per dispatch",
+                      lo=1.0, hi=1e4, per_decade=12).observe(bucket / m)
+        with obs.span("serve.bucket", key=prep.key, bucket=bucket, rows=m,
+                      pad_ratio=round(bucket / m, 4),
+                      cache="hit" if hit else "miss"):
             fn = self.cache.get_or_build(
-                (prep.key, prep.generation, "stream", snap.layout_epoch,
-                 tier, bucket),
-                lambda: self._build_stream_executable(prep, tier),
+                ck, lambda: self._timed_build(build, prep, bucket)
             )
-            return fn(pad_queries(y, bucket), y.shape[0],
-                      snap)[: y.shape[0]]
-        # Keyed on the fit generation: a refit (or evict + re-register)
-        # produces a new generation, so stale executables can never serve
-        # it.  The tier is part of the key — each precision gets its own
-        # bucket executable against its own prepared train tensors.
-        fn = self.cache.get_or_build(
-            (prep.key, prep.generation, tier, bucket),
-            lambda: self._build_executable(prep, tier),
-        )
-        return fn(pad_queries(y, bucket), y.shape[0])[: y.shape[0]]
+            if prep.stream is not None:
+                return fn(pad_queries(y, bucket), m, snap)[:m]
+            return fn(pad_queries(y, bucket), m)[:m]
+
+    def _timed_build(self, build, prep: PreparedEstimator, bucket: int):
+        """Build a bucket executable under a compile span + histogram, so
+        a recompile storm is visible as `serve.compile_s` mass."""
+        t0 = time.perf_counter()
+        with obs.span("serve.compile", key=prep.key, bucket=bucket):
+            fn = build()
+        obs.histogram("serve.compile_s", "bucket-executable build seconds",
+                      lo=1e-5, hi=1e3).observe(time.perf_counter() - t0)
+        return fn
 
     def _build_stream_executable(self, prep: PreparedEstimator, tier: str):
         """Bucket executable for a streaming estimator: fn(yp, n_real, snap).

@@ -1,9 +1,26 @@
-"""Serving telemetry: per-request latency percentiles and throughput."""
+"""Serving telemetry: per-request latency percentiles and throughput.
+
+The recorder is backed by an ``obs.Histogram`` — fixed log-spaced buckets
+from 10µs to 1000s — so a long-lived server's telemetry state is bounded
+regardless of request count (the seed kept an ever-growing sample list).
+Percentiles are therefore bucket estimates: exact for 0/1 samples,
+within one bucket-edge ratio (10^(1/6) ≈ 1.47×) otherwise.
+
+Summaries are JSON-safe by construction: an empty recorder reports zeros,
+never ``NaN`` (bare NaN is invalid JSON and breaks downstream parsers).
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+import threading
+from typing import Dict
+
+from repro.obs.metrics import Histogram
+
+#: Latency histogram range: 10µs .. 1000s, 6 buckets per decade.
+LATENCY_LO_S = 1e-5
+LATENCY_HI_S = 1e3
 
 
 @dataclasses.dataclass
@@ -23,42 +40,45 @@ class LatencyRecorder:
     """Accumulates (seconds, n_queries) samples; summarizes on demand.
 
     A coalesced dispatch records one sample per *request* it served (each
-    request in the fused batch observed the full dispatch latency — that is
-    what the client sees).
+    request in the fused batch observed the full dispatch latency — that
+    is what the client sees); the histogram's weighted ``observe`` folds
+    all of them in O(log buckets), not O(requests).
     """
 
     def __init__(self):
-        self._lat_s: List[float] = []
+        # A private (unregistered) histogram: engines reset their recorder
+        # freely without zeroing the process-wide obs registry.
+        self._hist = Histogram("serve.latency_s",
+                               lo=LATENCY_LO_S, hi=LATENCY_HI_S)
+        self._lock = threading.Lock()
         self._queries = 0
-        self._busy_s = 0.0
 
     def record(self, seconds: float, n_queries: int, n_requests: int = 1):
-        self._lat_s.extend([seconds] * n_requests)
-        self._queries += n_queries
-        self._busy_s += seconds
+        self._hist.observe(seconds, k=n_requests)
+        with self._lock:
+            self._queries += n_queries
 
     def reset(self) -> None:
-        self._lat_s.clear()
-        self._queries = 0
-        self._busy_s = 0.0
-
-    def _percentile(self, q: float) -> float:
-        xs = sorted(self._lat_s)
-        if not xs:
-            return float("nan")
-        idx = min(len(xs) - 1, max(0, round(q * (len(xs) - 1))))
-        return xs[idx]
+        self._hist.reset()
+        with self._lock:
+            self._queries = 0
 
     def summary(self) -> LatencySummary:
-        n = len(self._lat_s)
+        h = self._hist
+        n = h.count
+        busy_s = h.sum
         return LatencySummary(
             count=n,
             queries=self._queries,
-            qps=self._queries / self._busy_s if self._busy_s > 0 else 0.0,
-            p50_ms=1e3 * self._percentile(0.50),
-            p99_ms=1e3 * self._percentile(0.99),
-            mean_ms=1e3 * (sum(self._lat_s) / n) if n else float("nan"),
+            qps=self._queries / busy_s if busy_s > 0 else 0.0,
+            p50_ms=1e3 * h.quantile(0.50),
+            p99_ms=1e3 * h.quantile(0.99),
+            mean_ms=1e3 * h.mean,
         )
+
+    def histogram_snapshot(self) -> dict:
+        """The underlying bounded histogram (for ``ServeEngine.metrics``)."""
+        return self._hist.snapshot()
 
 
 __all__ = ["LatencyRecorder", "LatencySummary"]

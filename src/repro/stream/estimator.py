@@ -40,6 +40,7 @@ from typing import Dict, NamedTuple, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.bandwidth import gaussian_norm_const
 from repro.kernels import ops, spatial
 from repro.stream import delta
@@ -172,7 +173,10 @@ class StreamingSDKDE:
         if xs.shape[1] != self.d:
             raise ValueError(f"append dim {xs.shape[1]} != {self.d}")
         b = xs.shape[0]
-        with self._lock:
+        obs.counter("stream.appends", "append calls").inc()
+        obs.counter("stream.append_points", "points appended").inc(b)
+        with obs.span("stream.append", points=b, n_live=self.n_live), \
+                self._lock:
             if self.method == "sdkde":
                 ds0, ds1, s0n, s1n = delta.append_delta(
                     self.x, xs, self.sh, block=self.config.delta_block
@@ -230,7 +234,12 @@ class StreamingSDKDE:
         sentinels in place (the layout shape is untouched).
         """
         ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
-        with self._lock:
+        obs.counter("stream.evictions", "evict calls").inc()
+        obs.counter("stream.evict_points", "points evicted").inc(
+            int(ids.shape[0])
+        )
+        with obs.span("stream.evict", points=int(ids.shape[0]),
+                      n_live=self.n_live), self._lock:
             out = np.isin(self.ids, ids)
             if out.sum() != ids.shape[0]:
                 missing = np.setdiff1d(ids, self.ids)
@@ -349,7 +358,19 @@ class StreamingSDKDE:
             snap = self._snapshot
             if snap is not None and snap.gen == self.gen:
                 return snap
-            snap = self._build_snapshot()
+            with obs.span("stream.flush", gen=self.gen,
+                          n_live=self.n_live):
+                snap = self._build_snapshot()
+            obs.counter("stream.publishes",
+                        "snapshot generations published").inc()
+            obs.gauge("stream.dirty_tiles",
+                      "tiles refreshed by the last flush").set(
+                snap.affected_tiles)
+            if snap.xp is not None:
+                # live rows / layout slots: how full the slack-padded
+                # serving layout is (1.0 = the next append overflows)
+                obs.gauge("stream.slack_occupancy").set(
+                    snap.n_live / snap.xp.shape[0])
             self._snapshot = snap
             return snap
 
@@ -423,9 +444,14 @@ class StreamingSDKDE:
 
     def _publish_rebuilt(self, x_sd: np.ndarray, norm: float,
                          reason: str) -> StreamSnapshot:
-        self._rebuild_layout(x_sd)
+        with obs.span("stream.rebuild", reason=reason,
+                      n_live=x_sd.shape[0]):
+            self._rebuild_layout(x_sd)
         if reason != "initial":
             self.rebuilds += 1
+            obs.counter("stream.rebuilds",
+                        "full layout re-clusters",
+                        labels={"reason": reason}).inc()
             self.last_rebuild_reason = reason
         xp_j = jnp.asarray(self._xp)
         real_j = jnp.asarray(self._real)

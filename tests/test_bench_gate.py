@@ -43,6 +43,25 @@ def test_gate_ignores_ungated_cells():
     assert not rows and not failures
 
 
+def test_gate_ignores_non_dict_cells_and_metrics_key():
+    """Telemetry rows (obs_overhead), an embedded metrics snapshot, and
+    malformed/non-dict cells must never break the gate."""
+    base = _doc([
+        {"cell": "pruning", "n": 64, "modeled_speedup": 10.0},
+        "stray-string-cell",
+        None,
+    ])
+    cur = _doc([
+        {"cell": "pruning", "n": 64, "modeled_speedup": 10.0},
+        {"cell": "obs_overhead", "ratio": 1.01, "p50_on_ms": 2.0},
+        ["not", "a", "cell"],
+    ])
+    cur["metrics"] = {"serve.requests": {"type": "counter", "value": 3.0}}
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert len(rows) == 1 and rows[0][3]
+    assert not failures
+
+
 def test_gate_cli_exit_codes(tmp_path):
     base = tmp_path / "base.json"
     cur = tmp_path / "cur.json"
