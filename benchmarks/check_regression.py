@@ -15,6 +15,14 @@ measured value, because that cell's ratio is wall-clock-derived and varies
 across runners — the gate then enforces "still comfortably past target"
 instead of "within 15% of one machine's timing".
 
+``planner`` cells (benchmarks/planner_cells.py) get a second check on top
+of the speedup floor: every decision field of the emitted plan is compared
+against the pinned golden fixture (``tests/golden_plans.json``) by
+``request_key``, and ANY drift fails the gate unless the run passes the
+deliberate ``--regen-golden`` marker — the same contract as the conformance
+suite in tests/test_planner.py, enforced again at artifact time so a CI
+run can never upload a plan that silently diverged from review.
+
 A suite that recorded failed harnesses (``meta.failed_harnesses``) fails
 the gate outright, partial artifact or not.
 
@@ -30,10 +38,20 @@ import sys
 
 GATE_FIELD = "modeled_speedup"
 #: Fields that identify a cell across runs (whichever are present).
-ID_FIELDS = ("n", "m", "d", "h", "epsilon", "batch", "precision", "backend")
+ID_FIELDS = ("n", "m", "d", "h", "epsilon", "batch", "precision", "backend",
+             "q", "accuracy", "request_key")
+
+#: Plan decision fields cross-checked against the golden fixture.
+PLAN_FIELDS = ("backend", "precision", "prune", "block_m", "block_n")
 
 
 def cell_key(cell: dict) -> tuple:
+    # A request_key fully identifies a planner cell; the other ID fields a
+    # planner cell carries (backend, precision, ...) are decision OUTPUTS,
+    # and folding those into the identity would turn plan drift into a
+    # "missing cell" failure that --regen-golden could not mark deliberate.
+    if "request_key" in cell:
+        return (cell.get("cell"), ("request_key", cell["request_key"]))
     return (cell.get("cell"),) + tuple(
         (k, cell[k]) for k in ID_FIELDS if k in cell
     )
@@ -76,19 +94,92 @@ def check(current: dict, baseline: dict, tolerance: float):
     return rows, failures
 
 
+def check_plan_drift(current: dict, golden: dict,
+                     regen_marker: bool = False):
+    """Failures for ``planner`` cells whose decision left the golden pin.
+
+    Every planner cell in the current artifact is matched to the fixture
+    entry with the same ``request_key`` and compared field-by-field over
+    :data:`PLAN_FIELDS` plus ``plan_id``.  A cell whose request has no
+    fixture entry is itself a failure — new requests must be pinned via
+    the regen CLI before they can pass the gate.  ``regen_marker=True``
+    (the ``--regen-golden`` flag) downgrades every drift to an announced,
+    deliberate rewrite: nothing fails, but each mismatch is still listed
+    on stdout so the diff is reviewable.
+    """
+    plans = (golden or {}).get("plans", {})
+    failures, notes = [], []
+    for c in current.get("cells", ()):
+        if not isinstance(c, dict) or c.get("cell") != "planner":
+            continue
+        key = c.get("request_key")
+        pinned = (plans.get(key) or {}).get("plan")
+        if pinned is None:
+            (notes if regen_marker else failures).append(
+                f"planner cell has no golden entry: {key!r} — pin it with "
+                f"`python -m repro.plan --regen-golden`")
+            continue
+        drift = []
+        for f in PLAN_FIELDS:
+            if c.get(f) != pinned.get(f):
+                drift.append(f"{f}: golden {pinned.get(f)!r} "
+                             f"current {c.get(f)!r}")
+        if c.get("plan_id") != _plan_id_of(pinned):
+            drift.append(f"plan_id: golden {_plan_id_of(pinned)!r} "
+                         f"current {c.get('plan_id')!r}")
+        if drift:
+            msg = (f"plan drift vs golden for {key!r}: "
+                   + "; ".join(drift)
+                   + " — rerun `python -m repro.plan --regen-golden` and "
+                     "commit the fixture if this change is intended")
+            (notes if regen_marker else failures).append(msg)
+    return failures, notes
+
+
+def _plan_id_of(pinned: dict) -> str:
+    """The plan_id a golden ``plan`` record implies (mirrors
+    ExecutionPlan.plan_id without importing repro)."""
+    pr = pinned.get("prune")
+    pr = pr if isinstance(pr, str) else f"{pr:g}"
+    blocks = ("-" if pinned.get("block_m") is None
+              else f"{pinned.get('block_m')}x{pinned.get('block_n')}")
+    return (f"{pinned.get('backend')}/{pinned.get('precision')}"
+            f"/prune={pr}/{blocks}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_flash.json")
     ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.15)
+    ap.add_argument("--golden", default="tests/golden_plans.json",
+                    help="pinned planner-decision fixture; planner cells "
+                         "are cross-checked against it ('' disables)")
+    ap.add_argument("--regen-golden", action="store_true",
+                    help="deliberate-rewrite marker: report plan-vs-golden "
+                         "drift without failing the gate (pair with "
+                         "`python -m repro.plan --regen-golden`)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
+    golden = {}
+    if args.golden:
+        try:
+            with open(args.golden) as f:
+                golden = json.load(f)
+        except FileNotFoundError:
+            golden = {}
 
     rows, failures = check(current, baseline, args.tolerance)
+    if args.golden:   # missing fixture file still fails: plans must be pinned
+        drift, notes = check_plan_drift(current, golden,
+                                        regen_marker=args.regen_golden)
+        failures.extend(drift)
+        for msg in notes:
+            print(f"note (--regen-golden): {msg}")
     for key, base, got, ok in rows:
         name = key[0] + " " + " ".join(f"{k}={v}" for k, v in key[1:])
         got_s = "MISSING" if got is None else f"{got:.2f}"

@@ -1,0 +1,103 @@
+"""Planner-attributed benchmark cells: plan cost vs the default path.
+
+One ``planner`` cell per committed gated (``modeled_speedup``) baseline
+cell: the request the cell derives (``repro.plan.golden.request_for_cell``
+— the same derivation the golden fixture uses), the plan the planner
+chooses for it today, and the modeled cost of that plan against the
+*default serve path* (f32 @ 128x512 launch tiles, the ServeConfig
+defaults).  ``modeled_speedup`` = default cost / planned cost, so the
+regression gate enforces the acceptance bar directly: the planner must
+keep matching-or-beating the default path on every committed cell, within
+the gate's 15%.
+
+Cells also carry the plan's decision fields plus ``request_key`` so
+``benchmarks/check_regression.py`` can cross-check every cell against the
+pinned golden fixture (``tests/golden_plans.json``) and fail on silent
+plan drift.
+
+Everything here is deterministic — pure cost model + committed artifacts,
+no hardware timing — which is what makes these cells gateable at all.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import common
+from repro.kernels import autotune
+from repro.plan import (
+    BenchModel,
+    load_golden,
+    plan,
+    request_for_cell,
+    request_key,
+)
+
+GATE_FIELD = "modeled_speedup"
+
+
+def default_path_cost(req):
+    """Modeled cost of the default serve path for one request: the f32
+    tier at the ServeConfig default 128x512 launch tiles, dense.  (For
+    every committed regime the measured eps=0 occupancy extrapolates to
+    ~1.0 at 512-wide tiles, so dense IS the default path's model.)"""
+    block_n = max(128, (min(512, req.n) // 128) * 128)
+    return autotune.modeled_cost(
+        req.q, req.n, req.d, block_m=128, block_n=block_n,
+        precision="f32", vmem_itemsize=4,
+    )
+
+
+def main(baseline_path: str = "benchmarks/BENCH_baseline.json",
+         golden_path: str | None = None) -> None:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    try:
+        golden = load_golden(golden_path)["plans"]
+    except FileNotFoundError:
+        golden = {}
+
+    bench = BenchModel.load()
+    seen = set()
+    for cell in baseline.get("cells", ()):
+        if not isinstance(cell, dict) or GATE_FIELD not in cell:
+            continue
+        req = request_for_cell(cell)
+        if req is None:
+            continue
+        key = request_key(req)
+        if key in seen:          # several baseline cells derive one request
+            continue
+        seen.add(key)
+
+        p = plan(req, bench=bench)
+        default = default_path_cost(req)
+        if default is None:
+            common.emit("planner_error", request_key=key,
+                        error="default path infeasible")
+            continue
+        speedup = default.step_time / p.modeled_cost_s
+        pinned = golden.get(key, {}).get("plan")
+        common.emit(
+            "planner",
+            request_key=key,
+            n=req.n, d=req.d, q=req.q, accuracy=req.accuracy,
+            backend=p.backend, precision=p.precision,
+            prune=p.prune, block_m=p.block_m, block_n=p.block_n,
+            plan_id=p.plan_id,
+            plan_modeled_us=round(p.modeled_cost_s * 1e6, 3),
+            default_modeled_us=round(default.step_time * 1e6, 3),
+            modeled_speedup=round(speedup, 2),
+            beats_default=bool(speedup >= 1.0),
+            golden_match=(pinned == p.as_dict()) if pinned else None,
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(*(sys.argv[1:] or ()))
+    path = "BENCH_planner.json"
+    common.write_bench_json(path, suite="planner-cells")
+    print(f"# -> {path}", file=sys.stderr)

@@ -27,6 +27,7 @@ from benchmarks import (
     fig4_fusion,
     fig5_utilization,
     obs_overhead,
+    planner_cells,
     precision_sweep,
     pruning_sweep,
     serve_throughput,
@@ -88,6 +89,10 @@ def main() -> None:
          "(repro.stream)",
          streaming_throughput.main, smoke_n=2048, smoke_d=8,
          run_acceptance=True)
+    _run("planner", "execution-planner decisions per committed gated cell: "
+         "plan cost vs the default serve path + golden-fixture cross-check "
+         "(repro.plan, benchmarks/planner_cells.py)",
+         planner_cells.main)
     _run("obs_overhead", "serve p50 with telemetry off vs fully on "
          "(repro.obs; informational, not a speedup cell)",
          obs_overhead.main)

@@ -83,6 +83,33 @@ def resolve_prune(prune: PruneArg, cols: int, block_n: int) -> Optional[float]:
     return eps
 
 
+def _apply_plan(plan, n: int, m: int, d: int, *,
+                precision, block_m, block_n, prune):
+    """Fill wrapper knobs still at their defaults from an execution plan.
+
+    ``plan`` is None (no-op), ``"auto"`` (resolve one via
+    ``repro.plan.plan_for`` for this call's shape), or a resolved
+    ``repro.plan.ExecutionPlan``.  Override precedence matches the serve
+    layer: a knob passed away from its wrapper default always wins; a knob
+    left at its default ("f32" / "auto") is filled from the plan.
+    """
+    if plan is None:
+        return precision, block_m, block_n, prune
+    if plan == "auto":
+        from repro.plan import plan_for
+
+        plan = plan_for(n, d, q=m, backend="pallas")
+    if precision == "f32":
+        precision = plan.precision
+    if block_m == "auto" and plan.block_m is not None:
+        block_m = plan.block_m
+    if block_n == "auto" and plan.block_n is not None:
+        block_n = plan.block_n
+    if prune == "auto":
+        prune = plan.prune
+    return precision, block_m, block_n, prune
+
+
 def _traced(*arrays) -> bool:
     """True when any argument is an abstract tracer (jit/vmap/grad).
 
@@ -366,12 +393,17 @@ def flash_score_stats(
     interpret: bool = False,
     prune: PruneArg = "auto",
     seed: int = 0,
+    plan=None,
 ):
     """(S0, S1) score statistics over the train set via the fused kernel."""
     prec.validate(precision)
+    n, d = x.shape
+    precision, block_m, block_n, prune = _apply_plan(
+        plan, n, n, d, precision=precision, block_m=block_m,
+        block_n=block_n, prune=prune,
+    )
     if _traced(x):
         prune = "off"            # pruning host-syncs; stay traceable
-    n, d = x.shape
     block_m, block_n = _resolve(
         block_m, block_n, n, n, d, out_width=d + 1, precision=precision,
         interpret=interpret, pruned=prune != "off",
@@ -408,13 +440,14 @@ def flash_sdkde_shift(
     interpret: bool = False,
     prune: PruneArg = "auto",
     seed: int = 0,
+    plan=None,
 ) -> jnp.ndarray:
     """Debiased samples x^SD = x + (h²/2)·ŝ(x), score via the flash kernel."""
     sh = h if score_h is None else score_h
     s0, s1 = flash_score_stats(
         x, sh, precision=precision,
         block_m=block_m, block_n=block_n, interpret=interpret,
-        prune=prune, seed=seed,
+        prune=prune, seed=seed, plan=plan,
     )
     return _apply_score_shift(x.astype(jnp.float32), s0, s1, h, sh)
 
@@ -481,13 +514,18 @@ def flash_kde(
     interpret: bool = False,
     prune: PruneArg = "auto",
     seed: int = 0,
+    plan=None,
 ) -> jnp.ndarray:
     """Normalized Gaussian KDE densities at ``y`` (train set ``x``)."""
     prec.validate(precision)
-    if _traced(x, y):
-        prune = "off"            # pruning host-syncs; stay traceable
     n, d = x.shape
     m = y.shape[0]
+    precision, block_m, block_n, prune = _apply_plan(
+        plan, n, m, d, precision=precision, block_m=block_m,
+        block_n=block_n, prune=prune,
+    )
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
     block_m, block_n = _resolve(
         block_m, block_n, m, n, d, out_width=1, precision=precision,
         interpret=interpret, pruned=prune != "off",
@@ -519,13 +557,18 @@ def flash_laplace_kde(
     interpret: bool = False,
     prune: PruneArg = "auto",
     seed: int = 0,
+    plan=None,
 ) -> jnp.ndarray:
     """Fused Flash-Laplace-KDE densities at ``y`` — single quadratic pass."""
     prec.validate(precision)
-    if _traced(x, y):
-        prune = "off"            # pruning host-syncs; stay traceable
     n, d = x.shape
     m = y.shape[0]
+    precision, block_m, block_n, prune = _apply_plan(
+        plan, n, m, d, precision=precision, block_m=block_m,
+        block_n=block_n, prune=prune,
+    )
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
     block_m, block_n = _resolve(
         block_m, block_n, m, n, d, out_width=1, precision=precision,
         interpret=interpret, pruned=prune != "off",
@@ -950,6 +993,7 @@ def flash_sdkde(
     interpret: bool = False,
     prune: PruneArg = "auto",
     seed: int = 0,
+    plan=None,
 ) -> jnp.ndarray:
     """Full Flash-SD-KDE: score pass → shift → KDE at queries (normalized).
 
@@ -960,10 +1004,14 @@ def flash_sdkde(
     through ``prepare_train_columns`` (no second pad/transpose).
     """
     prec.validate(precision)
-    if _traced(x, y):
-        prune = "off"            # pruning host-syncs; stay traceable
     n, d = x.shape
     m = y.shape[0]
+    precision, block_m, block_n, prune = _apply_plan(
+        plan, n, m, d, precision=precision, block_m=block_m,
+        block_n=block_n, prune=prune,
+    )
+    if _traced(x, y):
+        prune = "off"            # pruning host-syncs; stay traceable
     sh = h if score_h is None else score_h
     s_bm, s_bn = _resolve(
         block_m, block_n, n, n, d, out_width=d + 1, precision=precision,

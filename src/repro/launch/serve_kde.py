@@ -26,7 +26,11 @@ from repro.serve import ServeConfig, ServeEngine
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="jnp",
+    # Plannable knobs default to None = "not supplied": under --plan auto
+    # they stay unset so the planner fills them (a supplied flag always
+    # wins — override precedence); under --plan off they fall back to the
+    # historical CLI defaults below.
+    ap.add_argument("--backend", default=None,
                     choices=["jnp", "pallas", "ring"])
     ap.add_argument("--method", default="sdkde",
                     choices=["kde", "sdkde", "laplace"])
@@ -38,19 +42,28 @@ def main():
     ap.add_argument("--min-batch", type=int, default=32,
                     help="smallest shape bucket")
     block_arg = lambda s: s if s == "auto" else int(s)  # noqa: E731
-    ap.add_argument("--block-m", type=block_arg, default=32,
+    ap.add_argument("--block-m", type=block_arg, default=None,
                     help="Pallas row tile (int or 'auto' = autotuned)")
-    ap.add_argument("--block-n", type=block_arg, default=512,
+    ap.add_argument("--block-n", type=block_arg, default=None,
                     help="Pallas column tile (int or 'auto')")
-    ap.add_argument("--precision", default="f32",
+    ap.add_argument("--precision", default=None,
                     choices=["f32", "bf16", "bf16x2"],
                     help="Pallas GEMM-operand tier (kernels/precision.py)")
     prune_arg = lambda s: s if s in ("auto", "off") else float(s)  # noqa: E731
-    ap.add_argument("--prune", type=prune_arg, default="auto",
+    ap.add_argument("--prune", type=prune_arg, default=None,
                     help="cluster pruning: 'auto' (exact, epsilon=0, on for "
                          "large sets), 'off' (dense), or a per-point "
                          "contribution epsilon like 1e-9 "
                          "(kernels/spatial.py)")
+    ap.add_argument("--plan", default="off", choices=["off", "auto"],
+                    help="'auto' resolves unset knobs through the "
+                         "repro.plan cost-model planner at fit time")
+    ap.add_argument("--accuracy-target", type=float, default=None,
+                    help="planner relative-accuracy budget "
+                         "(default f32-grade, 1e-5)")
+    ap.add_argument("--plan-json", metavar="PATH", default=None,
+                    help="write the resolved execution plan (request, "
+                         "decision, resolved knobs) to PATH")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="cross-check a batch against the jnp reference")
@@ -59,7 +72,7 @@ def main():
                          "interleave appends/evictions with the query "
                          "traffic — the O(n·b·d) delta pass instead of a "
                          "refit per update")
-    ap.add_argument("--staleness-budget", type=int, default=2,
+    ap.add_argument("--staleness-budget", type=int, default=None,
                     help="generations a streamed query may lag live "
                          "(stream mode; 0 = always fresh)")
     ap.add_argument("--append-batch", type=int, default=64,
@@ -85,29 +98,69 @@ def main():
     x = mix.sample(key, args.n)
     pool = mix.sample(jax.random.fold_in(key, 1), 4 * args.max_batch)
 
-    block_n = args.block_n if args.block_n == "auto" \
-        else min(args.block_n, args.n)
+    # Historical CLI defaults, applied only when the planner is off; under
+    # --plan auto an unsupplied knob stays at its ServeConfig default,
+    # which the planner reads as "mine to fill".
+    cli_defaults = dict(backend="jnp", block_m=32, block_n=512,
+                        precision="f32", prune="auto", staleness_budget=2)
+    knobs = {}
+    for name in cli_defaults:
+        v = getattr(args, name)
+        if v is None and args.plan == "off":
+            v = cli_defaults[name]
+        if v is not None:
+            knobs[name] = v
+    if isinstance(knobs.get("block_n"), int):
+        knobs["block_n"] = min(knobs["block_n"], args.n)
     cfg = ServeConfig(
-        backend=args.backend, method=args.method, interpret=True,
-        block_m=args.block_m, block_n=block_n,
-        precision=args.precision, prune=args.prune,
+        method=args.method, interpret=True,
         min_batch=args.min_batch, max_batch=args.max_batch,
-        stream=args.stream, staleness_budget=args.staleness_budget,
+        stream=args.stream, plan=args.plan,
+        accuracy_target=args.accuracy_target, **knobs,
     )
     eng = ServeEngine(cfg)
 
     t0 = time.perf_counter()
     prep = eng.register("traffic", x)
     fit_ms = 1e3 * (time.perf_counter() - t0)
-    print(f"registered: backend={args.backend} method={args.method} "
-          f"n={args.n} d={args.d} h={prep.h:.4f} precision={args.precision} "
-          f"prune={args.prune} "
+    rcfg = prep.config          # plan-resolved (== cfg when --plan off)
+    print(f"registered: backend={rcfg.backend} method={args.method} "
+          f"n={args.n} d={args.d} h={prep.h:.4f} precision={rcfg.precision} "
+          f"prune={rcfg.prune} "
           f"fit={fit_ms:.0f}ms (debias amortized; never re-run per query)")
+    if prep.plan is not None:
+        print(f"plan: {prep.plan.plan_id} "
+              f"(accuracy target {prep.plan.request.accuracy:g}, modeled "
+              f"{prep.plan.modeled_cost_s * 1e6:.0f}us/pass, "
+              f"bound {prep.plan.bound})")
     if prep.block_m is not None:
         print(f"launch tiles: block_m={prep.block_m} block_n={prep.block_n}"
               + (" (autotuned)" if "auto" in (args.block_m, args.block_n)
                  else ""))
-    print(f"shape buckets: {cfg.bucket_sizes(prep.ring_size, prep.block_m)}")
+    print(f"shape buckets: "
+          f"{rcfg.bucket_sizes(prep.ring_size, prep.block_m)}")
+
+    if args.plan_json:
+        import json
+
+        doc = {
+            "request": (prep.plan.request.as_dict()
+                        if prep.plan is not None else None),
+            "plan": (prep.plan.as_dict()
+                     if prep.plan is not None else None),
+            "plan_id": (prep.plan.plan_id
+                        if prep.plan is not None else None),
+            "resolved": {
+                "backend": rcfg.backend, "precision": rcfg.precision,
+                "prune": rcfg.prune, "block_m": prep.block_m,
+                "block_n": prep.block_n,
+                "staleness_budget": rcfg.staleness_budget,
+                "stream_background": rcfg.stream_background,
+            },
+        }
+        with open(args.plan_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"plan json -> {args.plan_json}")
 
     # Ragged traffic: log-uniform batch sizes, like real query fan-in.
     rng = np.random.default_rng(args.seed)
@@ -149,7 +202,7 @@ def main():
               f"{append_s:.2f}s: {appends / append_s:.0f} appends/s  "
               f"staleness p50={stale.get('p50', 0)} "
               f"p99={stale.get('p99', 0)} (budget "
-              f"{args.staleness_budget})  rebuilds={st.rebuilds}"
+              f"{rcfg.staleness_budget})  rebuilds={st.rebuilds}"
               + (f" (last: {st.last_rebuild_reason})"
                  if st.rebuilds else ""))
 
@@ -171,8 +224,9 @@ def main():
         # the f32 reference path; reduced tiers verify at their documented
         # accuracy bars (rtol + peak-relative atol for deep-tail densities,
         # see kernels/precision.py)
-        rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[args.precision]
-        atol_frac = {"f32": 1e-6, "bf16": 5e-3, "bf16x2": 1e-5}[args.precision]
+        rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[rcfg.precision]
+        atol_frac = {"f32": 1e-6, "bf16": 5e-3,
+                     "bf16x2": 1e-5}[rcfg.precision]
         np.testing.assert_allclose(
             got, want, rtol=rtol,
             atol=atol_frac * float(np.max(np.abs(want))))

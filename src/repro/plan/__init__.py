@@ -1,0 +1,59 @@
+"""Cost-model-driven execution planning.
+
+``repro.plan`` turns a (shape, accuracy target, backend hint) request into
+one validated :class:`ExecutionPlan` — precision tier, prune mode, tile
+blocks, backend, and stream-staleness policy — using the autotuner's
+modeled costs plus the committed benchmark cells. See
+``docs/architecture.md`` ("Execution planning") for the decision rules and
+override precedence.
+"""
+
+from repro.plan.golden import (
+    default_golden_path,
+    golden_entries,
+    load_docs,
+    load_golden,
+    request_for_cell,
+    request_key,
+    requests_from_docs,
+    write_golden,
+)
+from repro.plan.planner import (
+    DEFAULT_ACCURACY,
+    DEFAULT_Q,
+    EPS_SAFETY,
+    PALLAS_MIN_COLS,
+    TIER_ORDER,
+    TIER_RTOL,
+    BenchModel,
+    ExecutionPlan,
+    PlanRequest,
+    default_bench_paths,
+    plan,
+    plan_for,
+    resolve_config,
+)
+
+__all__ = [
+    "DEFAULT_ACCURACY",
+    "DEFAULT_Q",
+    "EPS_SAFETY",
+    "PALLAS_MIN_COLS",
+    "TIER_ORDER",
+    "TIER_RTOL",
+    "BenchModel",
+    "ExecutionPlan",
+    "PlanRequest",
+    "default_bench_paths",
+    "default_golden_path",
+    "golden_entries",
+    "load_docs",
+    "load_golden",
+    "plan",
+    "plan_for",
+    "request_for_cell",
+    "request_key",
+    "requests_from_docs",
+    "resolve_config",
+    "write_golden",
+]

@@ -1,0 +1,169 @@
+"""Golden-decision fixtures: pin the planner's choice for every committed
+benchmark cell.
+
+Every shape-bearing cell of ``BENCH_flash.json`` and
+``benchmarks/BENCH_baseline.json`` derives one :class:`~repro.plan.planner.
+PlanRequest` (same derivation everywhere — tests, the regen CLI, and the
+benchmark harness all call :func:`request_for_cell`), and the fixture at
+``tests/golden_plans.json`` records the planner's decision for each.
+
+The suite in ``tests/test_planner.py`` recomputes every plan from the
+committed artifacts and fails on any drift; ``python -m repro.plan
+--regen-golden`` is the ONLY way the fixture changes — a deliberate,
+reviewed rewrite, never a silent one.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.plan.planner import (
+    DEFAULT_ACCURACY,
+    DEFAULT_Q,
+    EPS_SAFETY,
+    TIER_RTOL,
+    BenchModel,
+    ExecutionPlan,
+    PlanRequest,
+    default_bench_paths,
+    plan,
+)
+
+# "planner" cells are the planner's own benchmark output — deriving
+# requests from them would feed the fixture back into itself.
+_SKIP_CELLS = {"harness", "harness_error", "planner"}
+_BACKENDS = {"jnp", "pallas", "ring"}
+
+
+def default_golden_path() -> Path:
+    """tests/golden_plans.json at the repo root."""
+    return Path(__file__).resolve().parents[3] / "tests" / "golden_plans.json"
+
+
+def request_for_cell(cell: dict) -> Optional[PlanRequest]:
+    """The PlanRequest one benchmark cell derives (None = no shape info).
+
+    Derivation rules (deterministic, shared by tests / regen / gate):
+      * ``n`` and ``d`` must both be present and positive;
+      * ``q`` = the cell's query rows (``m``, else ``batch``, else the
+        serve default);
+      * accuracy: an ``epsilon`` cell targets ``epsilon * EPS_SAFETY``
+        (the loosest target that epsilon is admissible under, floored at
+        the f32 default); a ``tier`` cell targets that tier's documented
+        rtol; the bf16-vs-f32 ``precision_model`` cell targets bf16-grade;
+        everything else targets the f32 default;
+      * backend: taken from the cell when it names one, else "auto";
+      * streaming cells plan ``stream=True``.
+    """
+    if not isinstance(cell, dict) or cell.get("cell") in _SKIP_CELLS:
+        return None
+    name = str(cell.get("cell", ""))
+    try:
+        n, d = int(cell["n"]), int(cell["d"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    if n < 1 or d < 1:
+        return None
+    q = cell.get("m", cell.get("batch", DEFAULT_Q))
+    try:
+        q = max(1, int(q))
+    except (TypeError, ValueError):
+        q = DEFAULT_Q
+
+    accuracy = DEFAULT_ACCURACY
+    if "epsilon" in cell:
+        try:
+            eps = float(cell["epsilon"])
+        except (TypeError, ValueError):
+            eps = 0.0
+        if eps > 0.0:
+            accuracy = max(DEFAULT_ACCURACY, eps * EPS_SAFETY)
+    elif cell.get("tier") in TIER_RTOL:
+        accuracy = TIER_RTOL[str(cell["tier"])]
+    elif name == "precision_model":
+        accuracy = TIER_RTOL["bf16"]
+
+    # normalize float-product dust (1e-6 * 100.0 != 1e-4 bitwise) so the
+    # fixture keys and gated cells carry clean targets
+    accuracy = float(f"{accuracy:.6g}")
+    backend = cell.get("backend")
+    backend = backend if backend in _BACKENDS else "auto"
+    return PlanRequest(n=n, d=d, q=q, accuracy=accuracy, backend=backend,
+                       stream=name.startswith("streaming"))
+
+
+def request_key(req: PlanRequest) -> str:
+    """Stable fixture key for one request."""
+    return (f"n={req.n} d={req.d} q={req.q} accuracy={req.accuracy:g} "
+            f"backend={req.backend} stream={req.stream}")
+
+
+def requests_from_docs(docs: Sequence[dict]) -> List[PlanRequest]:
+    """Every distinct request the docs' cells derive, in stable order."""
+    seen: Dict[str, PlanRequest] = {}
+    for doc in docs:
+        for cell in (doc or {}).get("cells", ()):
+            req = request_for_cell(cell)
+            if req is not None:
+                seen.setdefault(request_key(req), req)
+    return [seen[k] for k in sorted(seen)]
+
+
+def load_docs(paths: Optional[Sequence[Path]] = None) -> List[dict]:
+    docs = []
+    for p in (paths if paths is not None else default_bench_paths()):
+        p = Path(p)
+        if p.exists():
+            with open(p) as f:
+                docs.append(json.load(f))
+    return docs
+
+
+def golden_entries(paths: Optional[Sequence[Path]] = None
+                   ) -> Dict[str, dict]:
+    """key → {"request", "plan"} for every committed-cell request."""
+    docs = load_docs(paths)
+    bench = BenchModel(docs)
+    out: Dict[str, dict] = {}
+    for req in requests_from_docs(docs):
+        p: ExecutionPlan = plan(req, bench=bench)
+        out[request_key(req)] = {"request": req.as_dict(),
+                                 "plan": p.as_dict()}
+    return out
+
+
+def write_golden(path: Optional[Path] = None,
+                 bench_paths: Optional[Sequence[Path]] = None
+                 ) -> Tuple[Path, int]:
+    """(Re)write the golden fixture — the deliberate regen path."""
+    path = Path(path) if path is not None else default_golden_path()
+    entries = golden_entries(bench_paths)
+    doc = {
+        "meta": {
+            "regen": "python -m repro.plan --regen-golden",
+            "description": "pinned planner decisions per committed "
+                           "benchmark cell (tests/test_planner.py)",
+            "entries": len(entries),
+        },
+        "plans": {k: entries[k] for k in sorted(entries)},
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return path, len(entries)
+
+
+def load_golden(path: Optional[Path] = None) -> dict:
+    path = Path(path) if path is not None else default_golden_path()
+    with open(path) as f:
+        return json.load(f)
+
+
+__all__ = [
+    "default_golden_path", "request_for_cell", "request_key",
+    "requests_from_docs", "load_docs", "golden_entries",
+    "write_golden", "load_golden",
+]

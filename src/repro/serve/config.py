@@ -77,6 +77,14 @@ class ServeConfig:
     stream_slack: float = 0.5
     stream_background: bool = False
 
+    # execution planning (repro.plan): "auto" resolves every knob still at
+    # its dataclass default through the cost-model planner at fit time —
+    # explicitly-set knobs always win (override precedence, see
+    # docs/architecture.md "Execution planning").  ``accuracy_target`` is
+    # the planner's relative-accuracy budget; None = f32-grade (1e-5).
+    plan: Literal["off", "auto"] = "off"
+    accuracy_target: Optional[float] = None
+
     def __post_init__(self):
         if self.min_batch <= 0 or self.max_batch < self.min_batch:
             raise ValueError(
@@ -100,6 +108,13 @@ class ServeConfig:
             raise ValueError("staleness_budget must be >= 0")
         if self.stream_slack < 0:
             raise ValueError("stream_slack must be >= 0")
+        if self.plan not in ("off", "auto"):
+            raise ValueError(f"bad plan {self.plan!r} ('off' or 'auto')")
+        if self.accuracy_target is not None \
+                and not (self.accuracy_target > 0):
+            raise ValueError(
+                f"accuracy_target must be > 0, got {self.accuracy_target!r}"
+            )
         if self.stream and self.backend == "ring":
             raise ValueError(
                 "streaming estimators support the jnp/pallas backends "

@@ -61,11 +61,47 @@ class ServeEngine:
         h: Optional[float] = None,
         config: ServeConfig | None = None,
         refit: bool = False,
+        prewarm: Optional[bool] = None,
     ) -> PreparedEstimator:
+        """Fit (or fetch) an estimator.  ``prewarm=None`` follows the
+        resolved execution plan: plan-routed estimators build their
+        chosen bucket executable at register time so the first real
+        request never pays the compile; explicitly pass False to defer."""
         prep = self.registry.fit(key, x, h, config=config, refit=refit)
         if refit:
             self.cache.invalidate(lambda k: k[0] == key)
+        if prewarm is None:
+            prewarm = prep.plan is not None and getattr(
+                prep.plan, "prewarm", False)
+        if prewarm:
+            self.prewarm(key)
         return prep
+
+    def prewarm(self, key: str, all_buckets: bool = False) -> int:
+        """Build bucket executables ahead of traffic through the normal
+        LRU path (so prewarmed programs are the very ones requests hit).
+
+        Default warms the largest bucket — the one every oversize batch
+        chunks at; ``all_buckets`` walks the whole ladder.  Returns the
+        number of buckets warmed.  Prewarm dispatches are not recorded as
+        served latency."""
+        prep = self.registry.get(key)
+        cfg = prep.config
+        tier = cfg.precision
+        sizes = cfg.bucket_sizes(prep.ring_size, prep.block_m)
+        targets = sizes if all_buckets else sizes[-1:]
+        with obs.span("plan.prewarm", key=key, buckets=len(targets),
+                      plan=getattr(prep.plan, "plan_id", "")):
+            for bucket in targets:
+                snap = (prep.stream.ensure(cfg.staleness_budget)
+                        if prep.stream is not None else None)
+                y = jnp.zeros((bucket, prep.d), jnp.float32)
+                jax.block_until_ready(
+                    self._run_bucket(prep, y, tier, snap))
+        obs.counter("plan.prewarms",
+                    "bucket executables built ahead of traffic",
+                    ).inc(len(targets))
+        return len(targets)
 
     # -- query path ------------------------------------------------------
 
@@ -159,6 +195,10 @@ class ServeEngine:
         sp = obs.span("serve.dispatch", key=prep.key, backend=cfg.backend,
                       tier=tier, rows=int(y.shape[0]))
         with sp:
+            if prep.plan is not None:
+                # every served request traces back to the plan that
+                # shaped its execution
+                sp.set(plan=prep.plan.plan_id)
             if prep.stream is not None:
                 # the staleness gate: get a snapshot at most ``staleness_
                 # budget`` generations behind live (waiting for /

@@ -48,6 +48,11 @@ class PreparedEstimator:
     # streaming (config.stream): the incrementally maintained live state;
     # all prepared-state accessors delegate to its published snapshot
     stream: object = None
+    # execution planning (config.plan == "auto"): the repro.plan
+    # ExecutionPlan this estimator's knobs were resolved from, kept for
+    # tracing (every dispatch span carries plan.plan_id) and prewarming.
+    # None when the config pinned every knob by hand.
+    plan: object = None
     _columns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
@@ -194,14 +199,24 @@ class EstimatorRegistry:
             )
         h = float(h)
 
+        # Plan resolution happens exactly once per fit, before any backend
+        # branch: knobs still at their dataclass defaults are filled from
+        # the cost-model planner; explicitly-set knobs always win.
+        plan_obj = None
+        if cfg.plan == "auto":
+            from repro.plan import resolve_config
+
+            cfg, plan_obj = resolve_config(cfg, n=n, d=d)
+
         if cfg.stream:
-            return self._prepare_stream(key, x, h, cfg)
+            return self._prepare_stream(key, x, h, cfg, plan_obj)
 
         points = self._debias(x, h, cfg) if cfg.method == "sdkde" else x
         prep = PreparedEstimator(
             key=key, config=cfg, h=h, n_true=n, d=d,
             generation=self.n_fits, points=points,
             norm=n * gaussian_norm_const(d, 1.0) * h**d,
+            plan=plan_obj,
         )
 
         if cfg.backend == "pallas":
@@ -241,7 +256,8 @@ class EstimatorRegistry:
         )
 
     def _prepare_stream(
-        self, key: str, x: jnp.ndarray, h: float, cfg: ServeConfig
+        self, key: str, x: jnp.ndarray, h: float, cfg: ServeConfig,
+        plan_obj: object = None,
     ) -> PreparedEstimator:
         """Fit a streaming estimator: the one full score pass happens in
         the stream's constructor; every later ``append``/``evict_ids`` is
@@ -253,6 +269,7 @@ class EstimatorRegistry:
             key=key, config=cfg, h=h, n_true=n, d=d,
             generation=self.n_fits, points=x,
             norm=n * gaussian_norm_const(d, 1.0) * h**d,
+            plan=plan_obj,
         )
         block_n = 512
         if cfg.backend == "pallas":

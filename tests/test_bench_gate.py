@@ -77,6 +77,151 @@ def test_gate_cli_exit_codes(tmp_path):
         ["--current", str(cur), "--baseline", str(base)]) == 1
 
 
+# ---------------------------------------------------------------------------
+# planner cells: speedup floor + plan-vs-golden drift (benchmarks/
+# planner_cells.py, check_regression.check_plan_drift)
+
+_PLANNER_KEY = "n=64 d=4 q=16 accuracy=1e-05 backend=auto stream=False"
+
+
+def _planner_cell(**over):
+    cell = {
+        "cell": "planner", "request_key": _PLANNER_KEY,
+        "n": 64, "d": 4, "q": 16, "accuracy": 1e-05,
+        "backend": "pallas", "precision": "f32", "prune": 1e-09,
+        "block_m": 2048, "block_n": 128,
+        "plan_id": "pallas/f32/prune=1e-09/2048x128",
+        "modeled_speedup": 8.0, "beats_default": True,
+    }
+    cell.update(over)
+    return cell
+
+
+def _golden_doc():
+    return {"plans": {_PLANNER_KEY: {"plan": {
+        "backend": "pallas", "precision": "f32", "prune": 1e-09,
+        "block_m": 2048, "block_n": 128,
+    }}}}
+
+
+def test_planner_cell_is_gated_on_speedup():
+    """A planner cell carries modeled_speedup, so the 15% floor applies."""
+    base = _doc([_planner_cell()])
+    cur = _doc([_planner_cell(modeled_speedup=4.0)])
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert len(rows) == 1 and not rows[0][3]
+    assert failures and "modeled_speedup" in failures[0]
+
+
+def test_planner_cell_key_ignores_decision_fields():
+    """Identity is the request_key alone: a changed decision must surface
+    as plan DRIFT, not as a missing gated cell."""
+    base = _doc([_planner_cell()])
+    cur = _doc([_planner_cell(precision="bf16", block_m=256,
+                              plan_id="pallas/bf16/prune=1e-09/256x128")])
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert len(rows) == 1 and rows[0][3]      # same cell, speedup fine
+    assert not failures
+
+
+def test_plan_drift_fails_without_marker_and_notes_with():
+    cur = _doc([_planner_cell(prune=1e-06,
+                              plan_id="pallas/f32/prune=1e-06/2048x128")])
+    failures, notes = check_regression.check_plan_drift(cur, _golden_doc())
+    assert len(failures) == 1 and not notes
+    assert "prune" in failures[0] and "--regen-golden" in failures[0]
+
+    failures, notes = check_regression.check_plan_drift(
+        cur, _golden_doc(), regen_marker=True)
+    assert not failures and len(notes) == 1
+
+
+def test_plan_matching_golden_passes():
+    failures, notes = check_regression.check_plan_drift(
+        _doc([_planner_cell()]), _golden_doc())
+    assert not failures and not notes
+
+
+def test_plan_without_golden_entry_fails_unless_marked():
+    cur = _doc([_planner_cell(request_key="n=1 d=1 q=1 accuracy=1e-05 "
+                                          "backend=auto stream=False")])
+    failures, _ = check_regression.check_plan_drift(cur, _golden_doc())
+    assert failures and "no golden entry" in failures[0]
+    failures, notes = check_regression.check_plan_drift(
+        cur, _golden_doc(), regen_marker=True)
+    assert not failures and notes
+
+
+def test_plan_id_drift_detected_even_when_fields_match():
+    """plan_id is recomputed from the pinned fields, so a cell whose
+    plan_id disagrees with its own decision fields is caught too."""
+    cur = _doc([_planner_cell(plan_id="pallas/f32/prune=1e-09/512x512")])
+    failures, _ = check_regression.check_plan_drift(cur, _golden_doc())
+    assert failures and "plan_id" in failures[0]
+
+
+def test_missing_baseline_planner_cell_fails_gate():
+    base = _doc([_planner_cell()])
+    cur = _doc([])                      # harness didn't emit the cell
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert rows[0][2] is None
+    assert failures and "missing" in failures[0]
+
+
+def test_failed_harness_fails_gate_despite_healthy_planner_cells():
+    base = _doc([_planner_cell()])
+    cur = _doc([_planner_cell()], failed_harnesses="planner")
+    rows, failures = check_regression.check(cur, base, 0.15)
+    assert rows[0][3]                   # the cell itself is fine
+    assert failures and "planner" in failures[0]
+
+
+def test_gate_cli_regen_golden_marker(tmp_path):
+    """End-to-end: drift exits 1 without the marker, 0 with it."""
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    golden = tmp_path / "golden.json"
+    base.write_text(json.dumps(_doc([_planner_cell()])))
+    cur.write_text(json.dumps(_doc(
+        [_planner_cell(prune=1e-06,
+                       plan_id="pallas/f32/prune=1e-06/2048x128")])))
+    golden.write_text(json.dumps(_golden_doc()))
+    argv = ["--current", str(cur), "--baseline", str(base),
+            "--golden", str(golden)]
+    assert check_regression.main(argv) == 1
+    assert check_regression.main(argv + ["--regen-golden"]) == 0
+    # matching plan needs no marker
+    cur.write_text(json.dumps(_doc([_planner_cell()])))
+    assert check_regression.main(argv) == 0
+    # --golden '' disables the drift check entirely
+    cur.write_text(json.dumps(_doc(
+        [_planner_cell(prune=1e-06,
+                       plan_id="pallas/f32/prune=1e-06/2048x128")])))
+    assert check_regression.main(
+        ["--current", str(cur), "--baseline", str(base),
+         "--golden", ""]) == 0
+
+
+def test_committed_baseline_planner_cells_match_committed_golden():
+    """The repo's own artifacts agree: every planner cell in
+    BENCH_baseline.json matches tests/golden_plans.json exactly."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    with open(root / "benchmarks" / "BENCH_baseline.json") as f:
+        baseline = json.load(f)
+    with open(root / "tests" / "golden_plans.json") as f:
+        golden = json.load(f)
+    n_planner = sum(1 for c in baseline["cells"]
+                    if isinstance(c, dict) and c.get("cell") == "planner")
+    assert n_planner >= 4
+    failures, notes = check_regression.check_plan_drift(baseline, golden)
+    assert not failures and not notes
+    # and every one of them beat the default path when committed
+    assert all(c.get("beats_default") for c in baseline["cells"]
+               if isinstance(c, dict) and c.get("cell") == "planner")
+
+
 def test_run_harness_failure_recorded_and_nonzero(tmp_path):
     """A raising harness is recorded (emit + FAILURES) without aborting
     the suite, and the aggregator process exits nonzero."""

@@ -189,3 +189,50 @@ def test_lru_cache_unit():
         c.get_or_build(k, lambda k=k: built.append(k) or (lambda: k))
     assert built == ["a", "b", "c", "b"]   # 'b' evicted by 'c', rebuilt
     assert c.hits == 1 and c.misses == 4 and c.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# Execution planning (repro.plan): planner-chosen config == explicit knobs.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", ["f32", "bf16", "bf16x2"])
+def test_planned_config_matches_explicit_knobs(data, tier):
+    """A plan-resolved estimator serves the same densities as one whose
+    knobs are pinned by hand to the plan's choices (<= 1e-5 rel)."""
+    x, y = data
+    planned = ServeConfig(
+        backend="pallas", method="sdkde", interpret=True, plan="auto",
+        precision=tier,                   # explicit: wins over the plan
+        min_batch=16, max_batch=128,
+    )
+    ep = ServeEngine(planned)
+    prep = ep.register("ds", x, h=H)
+    assert prep.plan is not None
+    assert prep.config.precision == tier  # override precedence held
+    got_p = np.asarray(ep.query("ds", y[:100]))
+
+    explicit = ServeConfig(
+        backend="pallas", method="sdkde", interpret=True,
+        precision=tier, prune=prep.config.prune,
+        block_m=prep.block_m, block_n=prep.block_n,
+        min_batch=16, max_batch=128,
+    )
+    ee = ServeEngine(explicit)
+    ee.register("ds", x, h=H)
+    got_e = np.asarray(ee.query("ds", y[:100]))
+    np.testing.assert_allclose(got_p, got_e, rtol=1e-5,
+                               atol=1e-8 * float(np.max(got_e)))
+
+
+def test_planned_estimator_still_matches_reference(data):
+    x, y = data
+    eng = ServeEngine(ServeConfig(
+        backend="pallas", method="sdkde", interpret=True, plan="auto",
+        min_batch=16, max_batch=128,
+    ))
+    eng.register("ds", x, h=H)
+    got = np.asarray(eng.query("ds", y[:64]))
+    want = np.asarray(ref.sdkde_eval(x, y[:64], H, block=128))
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-6 * float(want.max()))

@@ -516,3 +516,59 @@ def test_stream_refit_bumps_generation_and_invalidates(data):
     np.testing.assert_allclose(fresh, want, rtol=1e-5,
                                atol=1e-6 * float(want.max()))
     assert not np.allclose(fresh, stale)
+
+
+# ---------------------------------------------------------------------------
+# Execution planning (repro.plan): planned streaming == explicit knobs,
+# across a generation flip.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", ["f32", "bf16", "bf16x2"])
+def test_planned_stream_matches_explicit_across_generation_flip(data, tier):
+    """A plan-resolved streaming estimator serves the same densities as a
+    hand-pinned one, before AND after an append bumps the generation."""
+    x, xa, y = data
+    planned = ServeConfig(
+        backend="pallas", method="sdkde", interpret=True, plan="auto",
+        precision=tier,                   # explicit: wins over the plan
+        stream=True, min_batch=16, max_batch=128,
+    )
+    ep = ServeEngine(planned)
+    prep = ep.register("ds", x, h=H)
+    assert prep.plan is not None
+    # default accuracy target is f32-grade -> the plan pins freshness
+    assert prep.config.staleness_budget == 0
+    explicit = ServeConfig(
+        backend="pallas", method="sdkde", interpret=True,
+        precision=tier, prune=prep.config.prune,
+        block_m=prep.block_m, block_n=prep.block_n,
+        stream=True, staleness_budget=0,
+        min_batch=16, max_batch=128,
+    )
+    ee = ServeEngine(explicit)
+    ee.register("ds", x, h=H)
+
+    before_p = np.asarray(ep.query("ds", y[:64]))
+    before_e = np.asarray(ee.query("ds", y[:64]))
+    np.testing.assert_allclose(before_p, before_e, rtol=1e-5,
+                               atol=1e-8 * float(np.max(before_e)))
+
+    ep.registry.append("ds", xa)          # generation flip on both
+    ee.registry.append("ds", xa)
+    after_p = np.asarray(ep.query("ds", y[:64]))
+    after_e = np.asarray(ee.query("ds", y[:64]))
+    np.testing.assert_allclose(after_p, after_e, rtol=1e-5,
+                               atol=1e-8 * float(np.max(after_e)))
+    assert not np.allclose(before_p, after_p)   # the flip actually served
+
+
+def test_planned_stream_loose_accuracy_gets_staleness_budget(data):
+    x, _, _ = data
+    eng = ServeEngine(ServeConfig(
+        backend="pallas", method="sdkde", interpret=True, plan="auto",
+        accuracy_target=5e-2, stream=True, min_batch=16, max_batch=128,
+    ))
+    prep = eng.register("ds", x, h=H)
+    assert prep.config.staleness_budget == 2
+    assert prep.config.stream_background
