@@ -1,0 +1,225 @@
+"""Chaos soak: sustained serving traffic across shard kill + recovery.
+
+The acceptance story of the resilience layer (PR 8), run as a benchmark
+cell so CI tracks it per PR:
+
+  1. **Soak** — sustained traffic through a ``ResilientEngine``
+     (S shards × R replicas) with a scheduled sustained kill of one
+     replica across the middle third of the run, then recovery.  Records
+     qps, steady-state vs chaos-window p99, retries/hedges/fence/readmit
+     activity — and HARD-FAILS (raises) if any query is dropped or the
+     chaos-window p99 exceeds 5× the steady-state p99.
+  2. **Degraded cell** — every replica of one shard killed: answers come
+     from the surviving shards, renormalized, with the certified
+     relative-error bound attached.  The cell records the bound vs the
+     actual error against the full-data oracle and HARD-FAILS if any
+     answer's actual error exceeds its certificate, or any certificate
+     exceeds the configured accuracy target.
+
+Both phases are deterministic under the seed (scheduled ``ChaosEvent``
+windows, seeded jitter), so a CI failure replays locally bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import kde as ref
+from repro.core.mixtures import mixture_for_dim
+from repro.fault_injection import ChaosConfig, ChaosEvent
+from repro.serve import ResilienceConfig, ResilientEngine, ServeConfig
+
+#: Acceptance bars (ISSUE 8): zero drops, bounded tail under chaos.
+P99_RATIO_MAX = 5.0
+#: Degraded-cell certified budget — partial-shard answers are coarse by
+#: construction (renormalization alone costs ~n_missing/n_live), so the
+#: budget is loose; the *certificate* is what must hold exactly.
+DEGRADED_ACCURACY = 10.0
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def run_soak(
+    n: int = 2048,
+    d: int = 4,
+    requests: int = 48,
+    shards: int = 2,
+    replicas: int = 2,
+    max_batch: int = 128,
+    seed: int = 0,
+    pace_s: float = 0.005,
+    heartbeat_timeout_s: float = 0.5,
+) -> dict:
+    """Phase 1: the kill + recovery soak.  Returns the stats dict (also
+    emitted as cells); raises on a dropped query or an unbounded tail."""
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = mix.sample(key, n)
+    pool = mix.sample(jax.random.fold_in(key, 1), 4 * max_batch)
+
+    kill_lo, kill_hi = requests // 3, 2 * requests // 3
+    chaos = ChaosConfig(events=(
+        ChaosEvent("shard_kill", shard=0, replica=0,
+                   start=kill_lo, stop=kill_hi),
+    ), seed=seed)
+    cfg = ServeConfig(backend="jnp", method="sdkde",
+                      min_batch=16, max_batch=max_batch)
+    rcfg = ResilienceConfig(
+        shards=shards, replicas=replicas, deadline_ms=30_000.0,
+        backoff_ms=1.0, heartbeat_timeout_s=heartbeat_timeout_s,
+        probe_every=4, seed=seed,
+    )
+    eng = ResilientEngine(cfg, rcfg, chaos=chaos)
+    table = eng.register("soak", x)
+
+    rng = np.random.default_rng(seed)
+    sizes = np.exp(rng.uniform(np.log(1), np.log(max_batch),
+                               requests)).astype(int).clip(1)
+    # warm every bucket the traffic will hit, so the soak measures
+    # dispatch policy, not first-compile storms
+    for b in cfg.bucket_sizes():
+        eng.query("soak", pool[:b], deadline_ms=120_000)
+    eng.latency.reset()
+
+    lat = {"steady": [], "chaos": [], "recovery": []}
+    t0 = time.perf_counter()
+    for i, m in enumerate(sizes):
+        phase = ("steady" if i < kill_lo else
+                 "chaos" if i < kill_hi else "recovery")
+        off = int(rng.integers(0, pool.shape[0] - m))
+        ans = eng.query("soak", pool[off:off + m])
+        lat[phase].append(ans.latency_s)
+        if pace_s:
+            time.sleep(pace_s)   # sustained traffic, not a tight loop
+    wall = time.perf_counter() - t0
+
+    st = dict(eng.stats)
+    steady_p99 = _pct(lat["steady"], 99)
+    chaos_p99 = _pct(lat["chaos"], 99)
+    # floor the denominator: at millisecond-scale steady latencies the
+    # ratio is scheduler noise, not a tail-latency regression signal
+    ratio = chaos_p99 / max(steady_p99, 5e-3)
+    out = {
+        "qps": int(sizes.sum() / wall),
+        "steady_p99_ms": round(1e3 * steady_p99, 3),
+        "chaos_p99_ms": round(1e3 * chaos_p99, 3),
+        "recovery_p99_ms": round(1e3 * _pct(lat["recovery"], 99), 3),
+        "p99_ratio": round(ratio, 3),
+        "dropped": st["dropped"],
+        "retries": st["retries"],
+        "hedges": st["hedges"],
+        "fenced": st["fenced"],
+        "readmits": st["readmits"],
+        "faults_injected": eng.injector.snapshot()["shard_kill"],
+    }
+    common.emit("chaos_soak", n=n, d=d, requests=requests,
+                shards=table.n_shards, replicas=replicas, **out)
+    eng.close()
+    if out["dropped"]:
+        raise RuntimeError(
+            f"chaos soak dropped {out['dropped']} queries — the replicated "
+            f"dispatch layer must survive a single-replica kill losslessly"
+        )
+    if ratio >= P99_RATIO_MAX:
+        raise RuntimeError(
+            f"chaos-window p99 {out['chaos_p99_ms']}ms is {ratio:.1f}x the "
+            f"steady-state p99 {out['steady_p99_ms']}ms (bar: "
+            f"< {P99_RATIO_MAX}x)"
+        )
+    return out
+
+
+def run_degraded(
+    n: int = 2048,
+    d: int = 4,
+    requests: int = 8,
+    query_rows: int = 64,
+    seed: int = 0,
+) -> dict:
+    """Phase 2: total loss of one shard — certified degraded answers.
+
+    Every answer's certificate is checked against the full-data oracle;
+    a bound that lies (actual error above it) or that exceeds the
+    accuracy target is a hard failure.
+    """
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = mix.sample(key, n)
+    pool = mix.sample(jax.random.fold_in(key, 1), 8 * query_rows)
+
+    chaos = ChaosConfig(events=(
+        ChaosEvent("shard_kill", shard=1, start=0, stop=1 << 30),
+    ), seed=seed)
+    cfg = ServeConfig(backend="jnp", method="sdkde",
+                      min_batch=16, max_batch=query_rows)
+    rcfg = ResilienceConfig(
+        shards=2, replicas=2, deadline_ms=30_000.0, backoff_ms=1.0,
+        max_retries=1, degraded_accuracy=DEGRADED_ACCURACY, seed=seed,
+    )
+    eng = ResilientEngine(cfg, rcfg, chaos=chaos)
+    table = eng.register("degraded", x)
+
+    rng = np.random.default_rng(seed + 1)
+    worst_bound = worst_actual = 0.0
+    served = violations = 0
+    for _ in range(requests):
+        off = int(rng.integers(0, pool.shape[0] - query_rows))
+        y = pool[off:off + query_rows]
+        ans = eng.query("degraded", y)
+        assert ans.degraded and ans.missing_shards == (1,)
+        oracle = np.asarray(
+            ref.sdkde_eval(x, y, table.h, block=1024), np.float64)
+        actual = np.abs(
+            np.asarray(ans.densities, np.float64) - oracle) / oracle
+        bounds = np.asarray(ans.rel_err_bounds, np.float64)
+        served += 1
+        # per-query domination: the certificate must hold pointwise
+        # (small f32 slack on the answer itself)
+        violations += int((actual > bounds + 1e-5).sum())
+        worst_bound = max(worst_bound, float(bounds.max()))
+        worst_actual = max(worst_actual, float(actual.max()))
+    out = {
+        "served": served,
+        "missing_shard_points": table.shard_n[1],
+        "rel_err_bound_max": round(worst_bound, 4),
+        "rel_err_actual_max": round(worst_actual, 4),
+        "bound_violations": violations,
+        "accuracy_target": DEGRADED_ACCURACY,
+    }
+    common.emit("chaos_degraded", n=n, d=d, **out)
+    eng.close()
+    if violations:
+        raise RuntimeError(
+            f"{violations} degraded answers exceeded their certified "
+            f"relative-error bound — the certificate must dominate"
+        )
+    if worst_bound > DEGRADED_ACCURACY:
+        raise RuntimeError(
+            f"certified bound {worst_bound:.3g} exceeds the accuracy "
+            f"target {DEGRADED_ACCURACY:g} yet the answer was served"
+        )
+    return out
+
+
+def main(n: int = 2048, d: int = 4, requests: int = 48,
+         seed: int = 0) -> None:
+    run_soak(n=n, d=d, requests=requests, seed=seed)
+    run_degraded(n=n, d=d, seed=seed)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(n=args.n, d=args.d, requests=args.requests, seed=args.seed)

@@ -20,6 +20,7 @@ import time
 import traceback
 
 from benchmarks import (
+    chaos_soak,
     common,
     fig1_runtime,
     fig2_oracle_16d,
@@ -96,6 +97,11 @@ def main() -> None:
     _run("obs_overhead", "serve p50 with telemetry off vs fully on "
          "(repro.obs; informational, not a speedup cell)",
          obs_overhead.main)
+    _run("chaos", "resilient serving soak: injected shard kill + recovery "
+         "under sustained traffic, plus certified degraded answers — "
+         "HARD-FAILS on any dropped query or a lying error certificate "
+         "(serve/resilience.py, fault_injection.py)",
+         chaos_soak.main, n=2048, d=4, requests=48)
     total = time.time() - t0
     # embed the process-wide metrics snapshot the suite itself produced —
     # cache hit rates, prune occupancies, tuner decisions — so the perf

@@ -23,7 +23,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
+
+from repro.fault_injection import InjectedFailure
 
 
 @dataclasses.dataclass
@@ -32,6 +34,13 @@ class HostState:
     last_beat: float
     step: int = 0
     alive: bool = True
+    # Fencing: once a restart decision committed a host as dead, late
+    # heartbeats from its zombie process must not revive it.  ``epoch``
+    # bumps on every fence; only a beat carrying the current epoch (i.e.
+    # from a process that was re-admitted by the coordinator, not the
+    # fenced zombie) is accepted again.
+    fenced: bool = False
+    epoch: int = 0
 
 
 class Supervisor:
@@ -55,12 +64,27 @@ class Supervisor:
         # EWMA of per-step wall time per host — straggler detection signal.
         self._step_time: Dict[int, float] = {}
         self._last_step_at: Dict[int, float] = {}
+        #: Beats rejected by fencing — zombie liveness signal for telemetry.
+        self.rejected_beats = 0
 
     # -- heartbeat ingestion ----------------------------------------------
 
-    def beat(self, host_id: int, step: int) -> None:
+    def beat(self, host_id: int, step: int,
+             epoch: Optional[int] = None) -> bool:
+        """Ingest a heartbeat; returns False if it was rejected.
+
+        A fenced host's beats are rejected unless they carry the host's
+        current fencing epoch — a zombie process that survived the
+        restart decision keeps beating with no (or a stale) epoch and can
+        no longer flip itself back to alive.
+        """
         now = self.clock()
         h = self.hosts[host_id]
+        if h.fenced:
+            if epoch != h.epoch:
+                self.rejected_beats += 1
+                return False
+            h.fenced = False   # re-admitted under the new epoch
         if step > h.step:
             prev = self._last_step_at.get(host_id)
             if prev is not None:
@@ -69,6 +93,30 @@ class Supervisor:
                 self._step_time[host_id] = 0.8 * ewma + 0.2 * dt
             self._last_step_at[host_id] = now
         h.last_beat, h.step, h.alive = now, step, True
+        return True
+
+    # -- fencing ------------------------------------------------------------
+
+    def fence(self, host_ids: Iterable[int]) -> None:
+        """Commit hosts as dead: bump their epoch and reject stale beats."""
+        for hid in host_ids:
+            h = self.hosts[hid]
+            if not h.fenced:
+                h.fenced = True
+                h.alive = False
+                h.epoch += 1
+
+    def fenced(self) -> List[int]:
+        return sorted(h.host_id for h in self.hosts.values() if h.fenced)
+
+    def readmit(self, host_id: int) -> int:
+        """Coordinator-side re-admission of a fenced host (e.g. after a
+        successful health probe); returns the epoch its beats must carry."""
+        h = self.hosts[host_id]
+        h.fenced = False
+        h.alive = True
+        h.last_beat = self.clock()
+        return h.epoch
 
     # -- classification -----------------------------------------------------
 
@@ -99,11 +147,19 @@ class Supervisor:
 
     # -- restart decision ----------------------------------------------------
 
-    def restart_plan(self, spare_hosts: int = 0) -> Optional[dict]:
-        """None if healthy; else a restart decision dict."""
+    def restart_plan(self, spare_hosts: int = 0, *,
+                     fence: bool = False) -> Optional[dict]:
+        """None if healthy; else a restart decision dict.
+
+        With ``fence=True`` the decision is also *committed*: the dead
+        hosts are fenced atomically with the plan, so a zombie's late
+        beat cannot revive a host the plan already removed.
+        """
         dead = self.dead_hosts()
         if not dead:
             return None
+        if fence:
+            self.fence(dead)
         live = len(self.hosts) - len(dead)
         if len(dead) <= spare_hosts:
             return {
@@ -136,11 +192,14 @@ class RestartLoop:
             try:
                 for i in range(start, total_steps):
                     if fail_at is not None and i == fail_at and starts == 1:
-                        raise RuntimeError("injected node failure")
+                        raise InjectedFailure("node_failure",
+                                              point="restart_loop")
                     self.step_fn(i)
                     done = i + 1
                     if (i + 1) % self.ckpt_every == 0:
                         self.save_fn(i + 1)
-            except RuntimeError:
+            except InjectedFailure:
                 continue   # supervisor restarts us; restore_fn resumes
+            # any other exception — a real bug in step_fn — propagates:
+            # absorbing it here would turn regressions into silent retries
         return starts

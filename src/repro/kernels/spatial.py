@@ -499,6 +499,70 @@ def visit_lists(keep, *, bucket_visits: bool = True) -> VisitLists:
     return VisitLists(jnp.asarray(counts), jnp.asarray(tmap), int(kmax), occ)
 
 
+def partition_clusters(labels, n_shards: int) -> np.ndarray:
+    """Balanced assignment of whole clusters to shards.
+
+    Greedy longest-processing-time: clusters (by point count, descending)
+    go to the currently-lightest shard, ties broken by lowest shard id so
+    the partition is deterministic.  Keeping clusters whole means every
+    shard is a self-contained cluster-aligned tile set — its own layout,
+    its own ``TileMeta``, its own certified bounds — which is exactly what
+    the resilience layer's per-shard error certificates need.
+
+    Returns ``(k,)`` int32: the shard of each cluster.  Requires
+    ``n_shards <= k`` so no shard ends up empty.
+    """
+    lab = np.asarray(labels)
+    k = int(lab.max()) + 1 if lab.size else 1
+    if not (1 <= n_shards <= k):
+        raise ValueError(
+            f"n_shards={n_shards} must be in [1, n_clusters={k}]"
+        )
+    sizes = np.bincount(lab, minlength=k)
+    shard_of = np.zeros(k, np.int32)
+    load = np.zeros(n_shards, np.int64)
+    filled = 0
+    for c in np.argsort(-sizes, kind="stable"):
+        # until every shard holds a cluster, seed the empty ones in order
+        s = filled if filled < n_shards else int(np.argmin(load))
+        shard_of[c] = s
+        load[s] += sizes[c]
+        filled += 1
+    return shard_of
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def point_mass_bound(y: jnp.ndarray, meta: TileMeta, inv2h2,
+                     *, kind: str = "kde") -> jnp.ndarray:
+    """Per-query upper bound on the unnormalized kernel mass of an
+    *entire absent point set* summarized by ``meta``.
+
+    Same certified geometry as ``tile_map``, applied per query row instead
+    of per row tile: each tile of the absent set contributes at most
+    ``count · w(arg) · exp(-arg)`` with ``arg = MARGIN·max(0, ‖y−c‖−r)²/
+    (2h²)`` — so summing over tiles bounds what a missing shard *would
+    have added* to the accumulator.  The resilience layer turns this into
+    the certified relative-error bound attached to degraded (partial-
+    shard) answers.  For ``laplace`` the bound also caps the magnitude of
+    *negative* missing contributions (|1 + d/2 − sq/2h²| ≤ 1 + d/2 + arg
+    on the tile), so it is a two-sided envelope.
+    """
+    assert kind in KINDS, kind
+    y32 = jnp.asarray(y, jnp.float32)
+    d = y32.shape[-1]
+    dist = jnp.sqrt(_sqdist(y32, meta.centroids))             # (m, t)
+    dmin = jnp.maximum(dist - meta.radii[None, :], 0.0)
+    arg = MARGIN * dmin * dmin * jnp.asarray(inv2h2, jnp.float32).reshape(())
+    if kind == "laplace":
+        w = 1.0 + d / 2.0 + arg
+    elif kind == "score":
+        w = jnp.maximum(1.0, meta.max_abs)[None, :]
+    else:
+        w = 1.0
+    per = meta.counts[None, :].astype(jnp.float32) * w * jnp.exp(-arg)
+    return jnp.sum(per, axis=1)                               # (m,)
+
+
 def epsilon_for_density_error(abs_err: float, d: int, h: float) -> float:
     """Per-point epsilon giving |Δdensity| ≤ abs_err (normalization undone).
 
@@ -514,5 +578,6 @@ __all__ = [
     "default_n_clusters", "build_index", "assign", "cluster_capacities",
     "cluster_slots", "place_points", "cluster_layout", "tile_metadata",
     "tile_meta_from_rows", "merge_tile_meta", "tile_metadata_update",
-    "tile_map", "visit_lists", "epsilon_for_density_error",
+    "tile_map", "visit_lists", "partition_clusters", "point_mass_bound",
+    "epsilon_for_density_error",
 ]

@@ -80,6 +80,19 @@ def main():
     ap.add_argument("--updates", type=int, default=16,
                     help="append/evict updates interleaved with the "
                          "traffic (stream mode)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the resilient dispatch layer with "
+                         "this many replica engines per shard (>1 enables "
+                         "repro.serve.ResilientEngine)")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="cluster-partitioned shards (resilient mode)")
+    ap.add_argument("--chaos", default=None, metavar="MODES",
+                    help="comma-separated fault modes to inject "
+                         "(shard_kill,slow_shard,compile_fail,nan_poison,"
+                         "staleness_blowout); shard_kill also schedules a "
+                         "sustained kill + recovery window")
+    ap.add_argument("--deadline-ms", type=float, default=5000.0,
+                    help="per-request deadline (resilient mode)")
     ap.add_argument("--metrics-json", metavar="PATH", default=None,
                     help="write a telemetry document (metrics snapshot, "
                          "Prometheus exposition, trace events if --trace) "
@@ -118,6 +131,15 @@ def main():
         stream=args.stream, plan=args.plan,
         accuracy_target=args.accuracy_target, **knobs,
     )
+
+    if args.replicas > 1 or args.chaos:
+        if args.stream:
+            ap.error("--replicas/--chaos and --stream are mutually "
+                     "exclusive (the resilient layer replicates static "
+                     "engines)")
+        _run_resilient(args, cfg, x, pool)
+        return
+
     eng = ServeEngine(cfg)
 
     t0 = time.perf_counter()
@@ -249,6 +271,111 @@ def main():
         print(f"telemetry: {n_metrics} registry metrics"
               + (f", {len(events)} trace events" if args.trace else "")
               + f" -> {args.metrics_json}")
+
+
+def _run_resilient(args, cfg, x, pool) -> None:
+    """Traffic loop through the resilient dispatch layer (optionally
+    under chaos), reporting the full fault-tolerance story: retries,
+    hedges, breaker states, fenced/readmitted hosts, degraded answers —
+    and a nonzero exit if any query was dropped under chaos."""
+    import json
+    import sys
+
+    from repro.fault_injection import ChaosConfig
+    from repro.serve import (ResilienceConfig, ResilientEngine, ServeError)
+
+    replicas = max(args.replicas, 2)   # chaos without a sibling = drops
+    chaos = (ChaosConfig.from_modes(args.chaos, requests=args.requests,
+                                    seed=args.seed)
+             if args.chaos else None)
+    rcfg = ResilienceConfig(
+        shards=args.shards, replicas=replicas,
+        deadline_ms=args.deadline_ms, seed=args.seed, backoff_ms=1.0,
+    )
+    eng = ResilientEngine(cfg, rcfg, chaos=chaos)
+    t0 = time.perf_counter()
+    table = eng.register("traffic", x)
+    fit_ms = 1e3 * (time.perf_counter() - t0)
+    print(f"registered: backend={cfg.backend} method={args.method} "
+          f"n={args.n} d={args.d} h={table.h:.4f} -> "
+          f"{table.n_shards} shards x {replicas} replicas "
+          f"(shard sizes {table.shard_n}) fit={fit_ms:.0f}ms")
+    if chaos is not None:
+        active = [m for m in ("shard_kill", "slow_shard", "compile_fail",
+                              "nan_poison", "staleness_blowout")
+                  if getattr(chaos, m) > 0 or any(
+                      e.kind == m for e in chaos.events)]
+        windows = [f"{e.kind}@s{e.shard}r{e.replica}[{e.start},{e.stop})"
+                   for e in chaos.events]
+        print(f"chaos: {','.join(active)} seed={chaos.seed} "
+              f"events={windows}")
+
+    rng = np.random.default_rng(args.seed)
+    sizes = np.exp(rng.uniform(np.log(1), np.log(args.max_batch),
+                               args.requests)).astype(int).clip(1)
+    degraded = errors = 0
+    t0 = time.perf_counter()
+    for m in sizes:
+        off = int(rng.integers(0, pool.shape[0] - m))
+        try:
+            ans = eng.query("traffic", pool[off:off + m])
+            degraded += int(ans.degraded)
+        except ServeError as e:
+            errors += 1
+            print(f"  shed: {type(e).__name__}: {e}")
+    wall = time.perf_counter() - t0
+
+    s = eng.latency.summary()
+    st = eng.stats
+    print(f"served {s.count} requests / {s.queries} queries in {wall:.2f}s: "
+          f"{s.queries / wall:.0f} q/s  p50={s.p50_ms:.2f}ms "
+          f"p99={s.p99_ms:.2f}ms")
+    print(f"resilience: retries={st['retries']} hedges={st['hedges']} "
+          f"(won {st['hedge_wins']}) fenced={st['fenced']} "
+          f"probes={st['probes']} readmits={st['readmits']} "
+          f"degraded={degraded} shed={st['shed']} "
+          f"dropped={st['dropped']}")
+    open_brk = [k for k, v in eng.breaker_states().items() if v != "closed"]
+    if open_brk:
+        print(f"breakers not closed: {open_brk}")
+    if eng.injector is not None:
+        print(f"faults injected: {eng.injector.snapshot()}")
+
+    if args.verify:
+        # post-traffic (outside any scheduled chaos window): the resilient
+        # answer must match the full-data reference exactly — and must NOT
+        # be degraded, so disallow uncertified fallbacks here
+        yv = pool[:256]
+        ans = eng.query("traffic", yv, allow_degraded=False,
+                        deadline_ms=60_000)
+        ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
+                  "laplace": ref.laplace_kde_eval}[args.method]
+        want = np.asarray(ref_fn(x, yv, table.h, block=1024))
+        rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[cfg.precision]
+        np.testing.assert_allclose(
+            np.asarray(ans.densities), want, rtol=rtol,
+            atol=1e-6 * float(np.max(np.abs(want))))
+        print(f"verify: resilient path matches full-data jnp reference "
+              f"(rtol {rtol:g})")
+
+    if args.metrics_json:
+        doc = {
+            "args": {k: v for k, v in vars(args).items()
+                     if isinstance(v, (int, float, str, bool, type(None)))},
+            "metrics": eng.metrics(),
+            "prometheus": obs.prometheus_text(),
+            "trace_events": obs.trace_events() if args.trace else [],
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"telemetry: {len(doc['metrics']['registry'])} registry "
+              f"metrics -> {args.metrics_json}")
+
+    eng.close()
+    if st["dropped"]:
+        print(f"FAIL: {st['dropped']} dropped queries under "
+              f"{'chaos' if chaos else 'steady state'}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

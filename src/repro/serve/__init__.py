@@ -16,13 +16,20 @@ any of the three execution backends (``jnp`` / ``pallas`` / ``ring``).
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
 from repro.serve.config import Backend, Method, ServeConfig
 from repro.serve.engine import ServeEngine
+from repro.serve.errors import (BadRequest, DeadlineExceeded, Degraded,
+                                Overloaded, ServeError, UnknownKey)
 from repro.serve.registry import EstimatorRegistry, PreparedEstimator
+from repro.serve.resilience import (ResilienceConfig, ResilientAnswer,
+                                    ResilientEngine)
 from repro.serve.stats import LatencyRecorder, LatencySummary
 
 __all__ = [
     "Backend", "Method", "ServeConfig",
     "EstimatorRegistry", "PreparedEstimator",
     "ServeEngine",
+    "ResilienceConfig", "ResilientAnswer", "ResilientEngine",
+    "ServeError", "UnknownKey", "BadRequest", "DeadlineExceeded",
+    "Overloaded", "Degraded",
     "ShapeBucketCache", "coalesce", "pad_queries", "split",
     "LatencyRecorder", "LatencySummary",
 ]

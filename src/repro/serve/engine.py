@@ -28,9 +28,10 @@ from typing import Deque, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import fault_injection, obs
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
 from repro.serve.config import ServeConfig
+from repro.serve.errors import BadRequest
 from repro.serve.registry import EstimatorRegistry, PreparedEstimator
 from repro.serve.stats import LatencyRecorder
 
@@ -115,10 +116,12 @@ class ServeEngine:
         """
         prep = self.registry.get(key)
         y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
+        self._check_query(prep, y)
         with obs.span("serve.request", key=key, rows=int(y.shape[0]),
                       requests=1):
             t0 = time.perf_counter()
-            dens = jax.block_until_ready(self._dispatch(prep, y, precision))
+            dens = jax.block_until_ready(fault_injection.poison(
+                "serve.result", self._dispatch(prep, y, precision)))
             dt = time.perf_counter() - t0
         self._note_served(dt, y.shape[0], 1)
         return dens
@@ -130,15 +133,23 @@ class ServeEngine:
         """Coalesce several ragged requests into one padded dispatch."""
         prep = self.registry.get(key)
         fused, sizes = coalesce(batches)
+        self._check_query(prep, fused)
         with obs.span("serve.request", key=key, rows=int(fused.shape[0]),
                       requests=len(sizes)):
             t0 = time.perf_counter()
-            dens = jax.block_until_ready(
-                self._dispatch(prep, fused, precision)
-            )
+            dens = jax.block_until_ready(fault_injection.poison(
+                "serve.result", self._dispatch(prep, fused, precision)))
             dt = time.perf_counter() - t0
         self._note_served(dt, fused.shape[0], len(sizes))
         return split(dens, sizes)
+
+    @staticmethod
+    def _check_query(prep: PreparedEstimator, y: jnp.ndarray) -> None:
+        if y.ndim != 2 or y.shape[0] == 0 or y.shape[-1] != prep.d:
+            raise BadRequest(
+                f"query shape {tuple(y.shape)} does not match estimator "
+                f"{prep.key!r} (expected (m, {prep.d}) with m >= 1)"
+            )
 
     def _note_served(self, seconds: float, rows: int, requests: int) -> None:
         self.latency.record(seconds, rows, requests)
@@ -195,6 +206,9 @@ class ServeEngine:
         sp = obs.span("serve.dispatch", key=prep.key, backend=cfg.backend,
                       tier=tier, rows=int(y.shape[0]))
         with sp:
+            # chaos hook: a killed replica raises InjectedFailure here, a
+            # slow one sleeps — before any compute, like a dead device
+            fault_injection.fire("serve.dispatch", key=prep.key)
             if prep.plan is not None:
                 # every served request traces back to the plan that
                 # shaped its execution
@@ -269,6 +283,7 @@ class ServeEngine:
         a recompile storm is visible as `serve.compile_s` mass."""
         t0 = time.perf_counter()
         with obs.span("serve.compile", key=prep.key, bucket=bucket):
+            fault_injection.fire("serve.compile", key=prep.key)
             fn = build()
         obs.histogram("serve.compile_s", "bucket-executable build seconds",
                       lo=1e-5, hi=1e3).observe(time.perf_counter() - t0)

@@ -1,0 +1,53 @@
+"""Typed serve-layer errors.
+
+Callers (and the CLI) need to tell "you asked for something that does not
+exist" apart from "the service shed your request" apart from "the answer
+is approximate" — three very different retry/alert policies.  Raw
+``KeyError`` / shape ``ValueError`` cannot carry that distinction, so the
+request path raises :class:`ServeError` subclasses instead.
+
+``UnknownKey`` additionally subclasses ``KeyError`` so pre-existing
+callers that guarded registry lookups with ``except KeyError`` keep
+working.
+"""
+
+from __future__ import annotations
+
+
+class ServeError(Exception):
+    """Base class for every error raised by the serve request path."""
+
+
+class UnknownKey(ServeError, KeyError):
+    """No estimator fitted under the requested key."""
+
+    def __str__(self) -> str:  # KeyError.__str__ repr-quotes; keep prose
+        return Exception.__str__(self)
+
+
+class BadRequest(ServeError, ValueError):
+    """Malformed query: wrong dimensionality or an empty batch."""
+
+
+class DeadlineExceeded(ServeError, TimeoutError):
+    """The request's deadline expired before any replica answered."""
+
+
+class Overloaded(ServeError):
+    """The service shed the request: no live replica could take it."""
+
+
+class Degraded(ServeError):
+    """A degraded (partial-shard) answer exists but its certified
+    relative-error bound exceeds the configured accuracy target, and the
+    caller did not opt into uncertified answers."""
+
+    def __init__(self, msg: str, *, bound: float = float("inf"),
+                 target: float = 0.0):
+        super().__init__(msg)
+        self.bound = bound
+        self.target = target
+
+
+__all__ = ["ServeError", "UnknownKey", "BadRequest", "DeadlineExceeded",
+           "Overloaded", "Degraded"]

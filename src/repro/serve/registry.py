@@ -17,10 +17,12 @@ from typing import Dict, Optional
 
 import jax.numpy as jnp
 
+from repro import fault_injection
 from repro.core import bandwidth as bw
 from repro.core import kde as ref
 from repro.core.bandwidth import gaussian_norm_const
 from repro.serve.config import ServeConfig
+from repro.serve.errors import UnknownKey
 
 
 @dataclasses.dataclass
@@ -135,7 +137,7 @@ class EstimatorRegistry:
 
     def get(self, key: str) -> PreparedEstimator:
         if key not in self._store:
-            raise KeyError(
+            raise UnknownKey(
                 f"estimator {key!r} not registered (have {list(self._store)})"
             )
         return self._store[key]
@@ -180,6 +182,7 @@ class EstimatorRegistry:
         if key in self._store and not refit:
             return self._store[key]
         cfg = config or self.config
+        fault_injection.fire("registry.fit", key=key)
         self.n_fits += 1
         prep = self._prepare(key, jnp.asarray(x, jnp.float32), h, cfg)
         self._store[key] = prep

@@ -1,0 +1,830 @@
+"""Resilient dispatch: replicated shards, deadlines, hedging, degradation.
+
+The ``ServeEngine`` is a single synchronous process: one dead device, one
+slow compile, one NaN and the request is gone.  This layer puts a
+production dispatch policy in front of it without touching the math:
+
+**Sharding.**  ``register`` runs the expensive fit ONCE on the full set
+(for sd-kde, the O(n²·d) debias — sharding *before* debiasing would
+change the estimator, since each point's score shift depends on every
+other point), then k-means-partitions the fitted points with
+``kernels.spatial``: whole clusters go to shards
+(``partition_clusters``), so each shard is a self-contained
+cluster-aligned tile set with its own ``TileMeta`` — the error
+certificate a *missing* shard's contribution is bounded by.  Each of the
+S shards is served by R independent ``ServeEngine`` replicas (own
+registry, own bucket-executable cache: a poisoned compile cache on one
+replica cannot infect its sibling).  Density is linear in per-point
+contributions, so the exact answer recombines as
+``Σ_s (n_s / n_tot) · dens_s`` for every method (kde / debiased-sdkde /
+laplace).
+
+**Dispatch policy**, per shard, inside a per-request deadline:
+
+  * retry with exponential backoff + deterministic jitter, rotating
+    across replicas;
+  * hedged dispatch — when the p99-informed hedge timer expires before
+    the primary answers, a duplicate fires at another replica and the
+    first success wins (``distributed/straggler.py``'s duplicate-dispatch
+    idiom, promoted to the serve path);
+  * a circuit breaker per (shard, replica, bucket-executable) that opens
+    after repeated failures (compile storms included — the bucket is part
+    of the key) and routes traffic around the broken executable until a
+    cooldown probe closes it;
+  * NaN guard: a non-finite result is a *failure* (retried), never an
+    answer;
+  * health: every successful attempt heartbeats a ``fault.Supervisor``
+    host (host = shard·R + replica); hosts past the heartbeat timeout are
+    fenced through ``restart_plan(fence=True)`` — late zombie beats are
+    rejected by the fencing epoch — and the routing table shrinks
+    ``elastic.plan_mesh``-style; periodic probes re-admit recovered
+    replicas.
+
+**Graceful degradation.**  When every replica of some shard is gone and
+the deadline still stands, the surviving shards' partial sum is
+renormalized into an estimate whose certified relative-error bound comes
+from the missing shards' tile metadata (``spatial.point_mass_bound`` —
+the same certified-geometry machinery as ``flash_pruned``): the true
+density provably lies in ``[S_live − U⁻, S_live + U] / (n_tot·c)`` with
+``U`` the per-query missing-mass bound.  The answer is returned *only*
+when the bound clears the configured accuracy target; otherwise the
+caller gets a typed ``Degraded`` error.  Under repeated deadline misses
+the engine sheds load by downgrading the precision tier along the PR-7
+planner's accuracy ladder (``TIER_RTOL``) instead of rejecting.
+
+Every decision emits ``repro.obs`` spans/counters: retries, hedges fired
+and won, breaker transitions, fenced/readmitted hosts, shed and degraded
+requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import fault_injection, obs
+from repro.core.bandwidth import gaussian_norm_const
+from repro.distributed import elastic
+from repro.distributed.fault import Supervisor
+from repro.fault_injection import ChaosConfig, FaultInjector, InjectedFailure
+from repro.kernels import spatial
+from repro.plan.planner import TIER_ORDER, TIER_RTOL
+from repro.serve.config import ServeConfig
+from repro.serve.engine import ServeEngine
+from repro.serve.errors import (BadRequest, DeadlineExceeded, Degraded,
+                                Overloaded, UnknownKey)
+from repro.serve.registry import EstimatorRegistry
+from repro.serve.stats import LatencyRecorder
+from repro.obs.metrics import Histogram
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Dispatch policy of the resilient layer (the math lives in
+    ``ServeConfig``; this only decides *where and when* to run it)."""
+
+    shards: int = 2              # S self-contained cluster groups
+    replicas: int = 2            # R independent engines per shard
+    deadline_ms: float = 5000.0  # default per-request deadline
+    max_retries: int = 3         # per shard, within the deadline
+    backoff_ms: float = 5.0
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.5  # ± fraction of the backoff step
+    hedge_after_ms: Optional[float] = None   # None → p99-informed
+    hedge_p99_factor: float = 2.0
+    hedge_min_ms: float = 25.0
+    breaker_threshold: int = 3   # consecutive failures before OPEN
+    breaker_cooldown_s: float = 1.0
+    heartbeat_timeout_s: float = 2.0
+    probe_every: int = 16        # requests between fenced-host probes
+    allow_degraded: bool = True
+    degraded_accuracy: float = 0.5   # certified rel-err budget, degraded
+    shed_after_misses: int = 3   # deadline misses before tier shedding
+    shed_requests: int = 16      # how long a shed episode lasts
+    shed_accuracy: float = 5e-2  # ladder budget while shedding (→ bf16)
+    meta_block: int = 128        # certificate tile rows per shard
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.shards < 1 or self.replicas < 1:
+            raise ValueError(
+                f"need shards >= 1 and replicas >= 1, got "
+                f"{self.shards}x{self.replicas}"
+            )
+        for name in ("deadline_ms", "backoff_ms", "hedge_min_ms",
+                     "breaker_cooldown_s", "heartbeat_timeout_s",
+                     "degraded_accuracy", "shed_accuracy", "meta_block"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name} must be > 0")
+        if self.max_retries < 0 or self.breaker_threshold < 1:
+            raise ValueError("max_retries >= 0, breaker_threshold >= 1")
+
+
+@dataclasses.dataclass
+class ResilientAnswer:
+    """Densities plus the provenance a resilient caller needs."""
+
+    densities: jnp.ndarray
+    degraded: bool = False
+    shed: bool = False
+    precision: str = "f32"
+    rel_err_bound: float = 0.0           # max over the batch (certified)
+    rel_err_bounds: Optional[np.ndarray] = None   # per query, degraded only
+    live_shards: Tuple[int, ...] = ()
+    missing_shards: Tuple[int, ...] = ()
+    retries: int = 0
+    hedges: int = 0
+    hedge_wins: int = 0
+    latency_s: float = 0.0
+
+
+class CircuitBreaker:
+    """CLOSED → (threshold failures) → OPEN → (cooldown) → HALF_OPEN →
+    one probe → CLOSED or back to OPEN."""
+
+    def __init__(self, threshold: int, cooldown_s: float,
+                 clock: Callable[[], float]):
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = 0.0
+        self._lock = threading.Lock()
+
+    def allow(self) -> bool:
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if self.clock() - self.opened_at >= self.cooldown_s:
+                    self._transition("half_open")
+                    return True          # this caller is the probe
+                return False
+            return False                 # half_open: probe already out
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            if self.state != "closed":
+                self._transition("closed")
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            if self.state == "half_open" or (
+                    self.state == "closed"
+                    and self.failures >= self.threshold):
+                self._transition("open")
+                self.opened_at = self.clock()
+
+    def _transition(self, to: str) -> None:
+        self.state = to
+        obs.counter("resilience.breaker_transitions",
+                    "circuit breaker state changes",
+                    labels={"to": to}).inc()
+
+
+class _ReplicaBusy(RuntimeError):
+    """A replica engine was still busy with an abandoned dispatch."""
+
+
+@dataclasses.dataclass
+class _ShardTable:
+    """One registered dataset, sharded and replicated."""
+
+    key: str
+    h: float
+    d: int
+    n_tot: int
+    kind: str                            # bound kind: kde | laplace
+    norm_c: float                        # (2π)^{d/2}·h^d per-point normalizer
+    shard_n: List[int]                   # real points per shard
+    shard_meta: List[spatial.TileMeta]   # per-shard certificate geometry
+    engines: List[List[ServeEngine]]     # [shard][replica]
+    skeys: List[str]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.engines)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines[0])
+
+
+class ResilientEngine:
+    """Replicated-shard front end over ``ServeEngine`` (see module doc)."""
+
+    def __init__(
+        self,
+        config: ServeConfig | None = None,
+        resilience: ResilienceConfig | None = None,
+        *,
+        chaos: ChaosConfig | None = None,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        config = config or ServeConfig()
+        if config.backend == "ring" or config.stream:
+            raise ValueError(
+                "ResilientEngine replicates static jnp/pallas engines; "
+                "ring sharding and streaming estimators are their own "
+                "distribution stories"
+            )
+        self.config = config
+        self.rcfg = resilience or ResilienceConfig()
+        self._clock = clock
+        self._sleep = sleep
+        self.injector: Optional[FaultInjector] = (
+            fault_injection.install(FaultInjector(chaos))
+            if chaos is not None else None
+        )
+        self._tables: Dict[str, _ShardTable] = {}
+        self.supervisor: Optional[Supervisor] = None
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(4, 2 * self.rcfg.shards),
+            thread_name_prefix="resilient-serve",
+        )
+        self._breakers: Dict[tuple, CircuitBreaker] = {}
+        self._eng_locks: Dict[tuple, threading.Lock] = {}
+        self._requests = 0
+        self._miss_streak = 0
+        self._shed_left = 0
+        self.latency = LatencyRecorder()
+        self._attempt_hist = Histogram("resilience.attempt_s",
+                                       lo=1e-5, hi=1e3)
+        self.stats: Dict[str, int] = {
+            k: 0 for k in ("requests", "dropped", "degraded", "shed",
+                           "retries", "hedges", "hedge_wins", "probes",
+                           "readmits", "fenced")
+        }
+        self.service_plan: Optional[elastic.MeshPlan] = None
+        self._lock = threading.Lock()
+
+    # -- fit path ---------------------------------------------------------
+
+    def register(self, key: str, x: jnp.ndarray,
+                 h: Optional[float] = None, *,
+                 prewarm: bool = True) -> _ShardTable:
+        """Fit once on the full set, then shard + replicate (see module
+        doc for why the debias must happen before the split)."""
+        cfg = self.config
+        # the quadratic debias runs on the jnp reference path — it is
+        # fit-time work, and its output feeds every shard backend equally
+        fit_reg = EstimatorRegistry(dataclasses.replace(
+            cfg, backend="jnp", stream=False, plan="off"))
+        prep = fit_reg.fit(key, x, h)
+        points = np.asarray(prep.points, np.float32)
+        n, d = points.shape
+
+        index = spatial.build_index(points, seed=self.rcfg.seed)
+        labels = np.asarray(index.labels)
+        n_clusters = int(labels.max()) + 1
+        S = min(self.rcfg.shards, n_clusters)
+        R = self.rcfg.replicas
+        shard_of = spatial.partition_clusters(labels, S)
+        point_shard = shard_of[labels]
+
+        # each shard serves the ALREADY-debiased slice, so sdkde becomes a
+        # plain kde over its shard — recombination is exact by linearity
+        shard_cfg = dataclasses.replace(
+            cfg, method="kde" if cfg.method == "sdkde" else cfg.method,
+            stream=False, plan="off",
+        )
+        kind = "laplace" if cfg.method == "laplace" else "kde"
+
+        engines: List[List[ServeEngine]] = []
+        shard_n: List[int] = []
+        shard_meta: List[spatial.TileMeta] = []
+        skeys: List[str] = []
+        block = self.rcfg.meta_block
+        for s in range(S):
+            mask = point_shard == s
+            pts = points[mask]
+            shard_n.append(int(pts.shape[0]))
+            skeys.append(f"{key}::s{s}")
+            # certificate geometry: the shard's own cluster-aligned tile
+            # set (local relabel keeps the layout dense)
+            local = np.unique(labels[mask], return_inverse=True)[1]
+            layout = spatial.cluster_layout(jnp.asarray(pts), local, block)
+            shard_meta.append(spatial.tile_metadata(
+                layout.points, layout.real, block=block))
+            row = []
+            for r in range(R):
+                eng = ServeEngine(shard_cfg)
+                eng.register(skeys[s], jnp.asarray(pts), h=prep.h,
+                             prewarm=False)
+                row.append(eng)
+            engines.append(row)
+
+        table = _ShardTable(
+            key=key, h=prep.h, d=d, n_tot=n, kind=kind,
+            norm_c=gaussian_norm_const(d, 1.0) * prep.h ** d,
+            shard_n=shard_n, shard_meta=shard_meta, engines=engines,
+            skeys=skeys,
+        )
+        self._tables[key] = table
+        if self.supervisor is None:
+            self.supervisor = Supervisor(
+                S * R, timeout=self.rcfg.heartbeat_timeout_s,
+                clock=self._clock,
+            )
+        if prewarm:
+            for s in range(S):
+                for r in range(R):
+                    engines[s][r].prewarm(skeys[s])
+        # registration is proof of life: without an initial beat, a slow
+        # prewarm (compile storm) outlives the heartbeat timeout and the
+        # first query finds every host already fenced
+        for hid in range(S * R):
+            self.supervisor.beat(hid, 0)
+        obs.counter("resilience.registered",
+                    "datasets sharded for resilient serving").inc()
+        return table
+
+    # -- query path -------------------------------------------------------
+
+    def query(self, key: str, y: jnp.ndarray, *,
+              precision: Optional[str] = None,
+              deadline_ms: Optional[float] = None,
+              allow_degraded: Optional[bool] = None) -> ResilientAnswer:
+        """Densities for one request under the full dispatch policy."""
+        table = self._tables.get(key)
+        if table is None:
+            raise UnknownKey(
+                f"estimator {key!r} not registered with the resilient "
+                f"engine (have {list(self._tables)})"
+            )
+        y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
+        if y.shape[0] == 0 or y.shape[-1] != table.d:
+            raise BadRequest(
+                f"query batch {tuple(y.shape)} does not match registered "
+                f"dimensionality d={table.d} (or is empty)"
+            )
+        if allow_degraded is None:
+            allow_degraded = self.rcfg.allow_degraded
+        if self.injector is not None:
+            self.injector.begin_request()
+        with self._lock:
+            self._requests += 1
+            req = self._requests
+            shed = self._shed_left > 0
+            if shed:
+                self._shed_left -= 1
+        tier = precision or self.config.precision
+        if shed and precision is None:
+            tier = _cheapest_tier(self.rcfg.shed_accuracy)
+            self.stats["shed"] += 1
+            obs.counter("resilience.shed",
+                        "requests served at a downgraded tier").inc()
+        t0 = self._clock()
+        deadline = t0 + (deadline_ms if deadline_ms is not None
+                         else self.rcfg.deadline_ms) / 1e3
+        self._refresh_health(table)
+        self._maybe_probe(table, req)
+
+        counters = {"retries": 0, "hedges": 0, "hedge_wins": 0}
+        results: List[Optional[jnp.ndarray]] = []
+        sp = obs.span("resilience.request", key=key, rows=int(y.shape[0]),
+                      tier=tier, shed=shed)
+        with sp:
+            for s in range(table.n_shards):
+                results.append(
+                    self._shard_query(table, s, y, deadline, tier, counters)
+                )
+            missing = tuple(s for s, r in enumerate(results) if r is None)
+            live = tuple(s for s, r in enumerate(results) if r is not None)
+            sp.set(missing=len(missing), retries=counters["retries"],
+                   hedges=counters["hedges"])
+            self.stats["requests"] += 1
+            self.stats["retries"] += counters["retries"]
+            self.stats["hedges"] += counters["hedges"]
+            self.stats["hedge_wins"] += counters["hedge_wins"]
+            obs.counter("resilience.requests", "resilient requests").inc()
+            if counters["retries"]:
+                obs.counter("resilience.retries",
+                            "shard dispatch retries").inc(counters["retries"])
+
+            if not missing:
+                dens = sum(
+                    (table.shard_n[s] / table.n_tot) * results[s]
+                    for s in live
+                )
+                self._note_done(t0, y.shape[0], deadline_hit=False)
+                return ResilientAnswer(
+                    densities=dens, precision=tier, shed=shed,
+                    live_shards=live, latency_s=self._clock() - t0,
+                    **counters,
+                )
+
+            if live and allow_degraded:
+                ans = self._degraded_answer(table, y, results, live,
+                                            missing, tier, shed, counters)
+                ans.latency_s = self._clock() - t0
+                sp.set(degraded=True, rel_err_bound=ans.rel_err_bound)
+                if ans.rel_err_bound <= self.rcfg.degraded_accuracy:
+                    self.stats["degraded"] += 1
+                    obs.counter("resilience.degraded",
+                                "certified partial-shard answers").inc()
+                    obs.histogram("resilience.degraded_bound",
+                                  "certified rel-err bound of degraded "
+                                  "answers", lo=1e-6, hi=1e2).observe(
+                        max(ans.rel_err_bound, 1e-6))
+                    self._note_done(t0, y.shape[0], deadline_hit=False)
+                    return ans
+                self._drop(key, "degraded_uncertifiable")
+                raise Degraded(
+                    f"partial answer from shards {live} has certified "
+                    f"rel-err bound {ans.rel_err_bound:.3g} > target "
+                    f"{self.rcfg.degraded_accuracy:.3g}",
+                    bound=ans.rel_err_bound,
+                    target=self.rcfg.degraded_accuracy,
+                )
+
+            timed_out = self._clock() >= deadline
+            self._note_done(t0, y.shape[0], deadline_hit=timed_out)
+            self._drop(key, "deadline" if timed_out else "no_live_shards")
+            if timed_out:
+                raise DeadlineExceeded(
+                    f"deadline expired with shards {missing} unanswered "
+                    f"(retries={counters['retries']})"
+                )
+            raise Overloaded(
+                f"no live replica for shards {missing} "
+                f"(fenced={self.supervisor.fenced()})"
+            )
+
+    # -- per-shard dispatch ----------------------------------------------
+
+    def _shard_query(self, table: _ShardTable, s: int, y, deadline: float,
+                     tier: str, counters) -> Optional[jnp.ndarray]:
+        rcfg = self.rcfg
+        bucket = table.engines[s][0].config.bucket_for(int(y.shape[0]))
+        backoff = rcfg.backoff_ms / 1e3
+        for attempt in range(rcfg.max_retries + 1):
+            if self._clock() >= deadline:
+                return None
+            cands = self._candidates(table, s, bucket, attempt)
+            if not cands:
+                return None
+            dens = self._race(table, s, cands, y, deadline, tier, counters)
+            if dens is not None:
+                return dens
+            counters["retries"] += 1
+            if attempt < rcfg.max_retries:
+                # deterministic jitter: a thundering herd of retries must
+                # not re-synchronize, but a replayed soak must
+                u = float(np.random.default_rng(
+                    (rcfg.seed, self._requests, s, attempt)).random())
+                step = backoff * (1.0 + rcfg.backoff_jitter * (2 * u - 1))
+                self._sleep(min(step, max(deadline - self._clock(), 0.0)))
+                backoff *= rcfg.backoff_factor
+        return None
+
+    def _candidates(self, table: _ShardTable, s: int, bucket: int,
+                    attempt: int) -> List[int]:
+        """Live, breaker-admitted replicas of shard ``s``, primary first."""
+        R = table.n_replicas
+        sup = self.supervisor
+        # rotate the primary per REQUEST, not per call: a per-call counter
+        # advances by n_shards each request, which for R | n_shards aliases
+        # to a fixed primary per shard (replica 0 of shard 0 would never
+        # see traffic)
+        order = [(r + self._requests + s + attempt) % R for r in range(R)]
+        out = []
+        for r in order:
+            host = sup.hosts[s * R + r]
+            if host.fenced:
+                continue
+            if self._breaker(table.key, s, r, bucket).allow():
+                out.append(r)
+        return out
+
+    def _race(self, table, s: int, cands: List[int], y, deadline: float,
+              tier: str, counters) -> Optional[jnp.ndarray]:
+        """One hedged round: primary, then a duplicate when the hedge
+        timer expires; first finite success wins."""
+        bucket = table.engines[s][0].config.bucket_for(int(y.shape[0]))
+        futures = {}
+        primary = cands[0]
+        futures[self._pool.submit(
+            self._attempt, table, s, primary, y, tier, deadline)] = primary
+        if len(cands) > 1:
+            timer = min(self._hedge_timer(),
+                        max(deadline - self._clock(), 0.0))
+            done, _ = wait(list(futures), timeout=timer)
+            if not done:
+                counters["hedges"] += 1
+                obs.counter("resilience.hedges",
+                            "hedged duplicate dispatches fired").inc()
+                futures[self._pool.submit(
+                    self._attempt, table, s, cands[1], y, tier, deadline,
+                )] = cands[1]
+        remaining = set(futures)
+        while remaining:
+            budget = deadline - self._clock()
+            if budget <= 0:
+                break
+            done, _ = wait(remaining, timeout=budget,
+                           return_when=FIRST_COMPLETED)
+            if not done:
+                break
+            for f in done:
+                remaining.discard(f)
+                r = futures[f]
+                br = self._breaker(table.key, s, r, bucket)
+                err = f.exception()
+                if err is not None:
+                    if not isinstance(err, (InjectedFailure, _ReplicaBusy)):
+                        self._abandon(futures, remaining, table, s, bucket)
+                        raise err        # a real bug is not chaos
+                    br.record_failure()
+                    obs.counter(
+                        "resilience.attempt_failures",
+                        "failed shard dispatch attempts",
+                        labels={"kind": getattr(err, "kind", "busy")},
+                    ).inc()
+                    continue
+                t_attempt, dens = f.result()
+                if not np.isfinite(np.asarray(dens)).all():
+                    br.record_failure()
+                    obs.counter("resilience.attempt_failures",
+                                "failed shard dispatch attempts",
+                                labels={"kind": "nan"}).inc()
+                    continue
+                br.record_success()
+                self.supervisor.beat(s * table.n_replicas + r,
+                                     self._requests)
+                self._attempt_hist.observe(t_attempt)
+                if r != cands[0]:
+                    counters["hedge_wins"] += 1
+                    obs.counter("resilience.hedge_wins",
+                                "hedged duplicates that answered "
+                                "first").inc()
+                self._abandon(futures, remaining, table, s, bucket)
+                return dens
+        self._abandon(futures, remaining, table, s, bucket)
+        return None
+
+    def _abandon(self, futures, remaining, table, s: int, bucket) -> None:
+        """Liveness bookkeeping for futures a race leaves behind: a lost
+        hedge that still completes successfully proves its replica alive
+        (beat + breaker close) — without this, replicas that keep losing
+        races decay into fenced state while perfectly healthy."""
+        for f in remaining:
+            r = futures[f]
+            f.add_done_callback(
+                lambda fut, r=r: self._absorb(table, s, r, bucket, fut))
+
+    def _absorb(self, table, s: int, r: int, bucket, f) -> None:
+        err = f.exception()
+        br = self._breaker(table.key, s, r, bucket)
+        if err is not None:
+            if isinstance(err, (InjectedFailure, _ReplicaBusy)):
+                br.record_failure()
+            else:
+                # callbacks cannot re-raise; make real bugs on abandoned
+                # attempts visible instead of silently swallowed
+                obs.counter("resilience.abandoned_errors",
+                            "non-chaos exceptions on abandoned attempts",
+                            labels={"type": type(err).__name__}).inc()
+            return
+        t_attempt, dens = f.result()
+        if np.isfinite(np.asarray(dens)).all():
+            br.record_success()
+            self.supervisor.beat(s * table.n_replicas + r, self._requests)
+            self._attempt_hist.observe(t_attempt)
+
+    def _attempt(self, table, s: int, r: int, y, tier: str,
+                 deadline: float):
+        """One dispatch on replica engine (s, r) under injection scope.
+
+        The per-engine lock serializes against abandoned earlier attempts
+        (ServeEngine is not reentrant); failing fast as busy is better
+        than silently corrupting a bucket cache.
+        """
+        lock = self._eng_lock(table.key, s, r)
+        budget = max(deadline - self._clock(), 0.0)
+        if not lock.acquire(timeout=budget if budget > 0 else 0.001):
+            raise _ReplicaBusy(f"replica ({s},{r}) busy past deadline")
+        try:
+            t0 = self._clock()
+            ctx = (self.injector.scope(s, r) if self.injector is not None
+                   else _null_ctx())
+            with ctx:
+                dens = table.engines[s][r].query(
+                    table.skeys[s], y, precision=tier)
+            return self._clock() - t0, dens
+        finally:
+            lock.release()
+
+    def _hedge_timer(self) -> float:
+        rcfg = self.rcfg
+        if rcfg.hedge_after_ms is not None:
+            return rcfg.hedge_after_ms / 1e3
+        if self._attempt_hist.count >= 16:
+            return max(rcfg.hedge_min_ms / 1e3,
+                       rcfg.hedge_p99_factor
+                       * self._attempt_hist.quantile(0.99))
+        return rcfg.hedge_min_ms / 1e3
+
+    # -- degradation ------------------------------------------------------
+
+    def _degraded_answer(self, table, y, results, live, missing, tier,
+                         shed, counters) -> ResilientAnswer:
+        """Renormalized partial sum + certified relative-error bound.
+
+        Let c = (2π)^{d/2}h^d, S = Σ_live n_s·dens_s·c the live
+        unnormalized mass and U(y) the certified upper bound on what the
+        missing shards could have added (``spatial.point_mass_bound`` over
+        their tile metadata; two-sided for laplace, one-sided ≥0 for
+        kde).  The true density lies in [lo, hi] = [S − U⁻, S + U] /
+        (n_tot·c); the returned estimate is f̂ = S / (n_live·c) and its
+        relative error against ANY f in [lo, hi] is maximized at an
+        endpoint — that maximum is the certified bound (∞ when lo ≤ 0:
+        an uncertifiable query)."""
+        n_live = sum(table.shard_n[s] for s in live)
+        sums_live = sum(
+            float(table.shard_n[s]) * np.asarray(results[s], np.float64)
+            for s in live
+        )                                        # Σ n_s·dens_s  (per query)
+        f_hat = sums_live / n_live
+        inv2h2 = jnp.float32(1.0 / (2.0 * table.h * table.h))
+        u = np.zeros_like(f_hat)
+        for s in missing:
+            u += np.asarray(spatial.point_mass_bound(
+                y, table.shard_meta[s], inv2h2, kind=table.kind,
+            ), np.float64)
+        u /= table.norm_c                        # same units as n·dens
+        u_neg = u if table.kind == "laplace" else 0.0
+        lo = (sums_live - u_neg) / table.n_tot
+        hi = (sums_live + u) / table.n_tot
+        with np.errstate(divide="ignore", invalid="ignore"):
+            rel = np.maximum(np.abs(f_hat - lo) / lo,
+                             np.abs(f_hat - hi) / hi)
+        rel = np.where(lo > 0, rel, np.inf)
+        dens = jnp.asarray(f_hat, jnp.float32)
+        return ResilientAnswer(
+            densities=dens, degraded=True, shed=shed, precision=tier,
+            rel_err_bound=float(np.max(rel)) if rel.size else 0.0,
+            rel_err_bounds=rel, live_shards=live, missing_shards=missing,
+            **counters,
+        )
+
+    # -- health -----------------------------------------------------------
+
+    def _refresh_health(self, table) -> None:
+        sup = self.supervisor
+        before = set(sup.fenced())
+        plan = sup.restart_plan(fence=True)
+        if plan is None:
+            return
+        newly = [h for h in plan["dead"] if h not in before]
+        if not newly:
+            return
+        self.stats["fenced"] += len(newly)
+        obs.counter("resilience.fenced",
+                    "replica hosts fenced after missed heartbeats").inc(
+            len(newly))
+        n_live = len(sup.hosts) - len(sup.fenced())
+        live_shards = {
+            s for s in range(table.n_shards)
+            for r in range(table.n_replicas)
+            if not sup.hosts[s * table.n_replicas + r].fenced
+        }
+        # the routing table shrinks the same way an elastic mesh would:
+        # surviving hosts re-planned as (data=replica, model=shard)
+        self.service_plan = elastic.plan_mesh(
+            max(n_live, 1), model_parallel=max(len(live_shards), 1))
+        obs.gauge("resilience.live_hosts",
+                  "replica hosts currently serving").set(n_live)
+
+    def _maybe_probe(self, table, req: int) -> None:
+        """Every ``probe_every`` requests, health-probe one fenced host;
+        success re-admits it (supervisor epoch bump + breaker reset)."""
+        if req % self.rcfg.probe_every:
+            return
+        fenced = self.supervisor.fenced()
+        if not fenced:
+            return
+        hid = fenced[(req // self.rcfg.probe_every) % len(fenced)]
+        R = table.n_replicas
+        s, r = divmod(hid, R)
+        if s >= table.n_shards:
+            return
+        self.stats["probes"] += 1
+        obs.counter("resilience.probes", "fenced-host health probes").inc()
+        probe = jnp.zeros((1, table.d), jnp.float32)
+        try:
+            _, dens = self._attempt(table, s, r, probe,
+                                    self.config.precision,
+                                    self._clock() + 1.0)
+            if not np.isfinite(np.asarray(dens)).all():
+                return
+        except (InjectedFailure, _ReplicaBusy):
+            return
+        self.supervisor.readmit(hid)
+        for bk, br in list(self._breakers.items()):
+            if bk[:3] == (table.key, s, r):
+                br.record_success()
+        self.stats["readmits"] += 1
+        obs.counter("resilience.readmits",
+                    "fenced hosts re-admitted after a probe").inc()
+
+    # -- bookkeeping ------------------------------------------------------
+
+    def _note_done(self, t0: float, rows: int, *, deadline_hit: bool):
+        self.latency.record(self._clock() - t0, rows, 1)
+        with self._lock:
+            if deadline_hit:
+                self._miss_streak += 1
+                if self._miss_streak >= self.rcfg.shed_after_misses \
+                        and self._shed_left == 0:
+                    self._shed_left = self.rcfg.shed_requests
+                    self._miss_streak = 0
+                    obs.counter("resilience.shed_episodes",
+                                "tier-downgrade episodes entered").inc()
+            else:
+                self._miss_streak = 0
+
+    def _drop(self, key: str, reason: str) -> None:
+        self.stats["dropped"] += 1
+        obs.counter("resilience.dropped", "requests that got no answer",
+                    labels={"reason": reason}).inc()
+
+    def _breaker(self, key, s, r, bucket) -> CircuitBreaker:
+        bk = (key, s, r, bucket)
+        with self._lock:
+            if bk not in self._breakers:
+                self._breakers[bk] = CircuitBreaker(
+                    self.rcfg.breaker_threshold,
+                    self.rcfg.breaker_cooldown_s, self._clock)
+            return self._breakers[bk]
+
+    def _eng_lock(self, key, s, r) -> threading.Lock:
+        lk = (key, s, r)
+        with self._lock:
+            if lk not in self._eng_locks:
+                self._eng_locks[lk] = threading.Lock()
+            return self._eng_locks[lk]
+
+    # -- telemetry / lifecycle -------------------------------------------
+
+    def breaker_states(self) -> Dict[str, str]:
+        return {f"{k[0]}/s{k[1]}r{k[2]}b{k[3]}": br.state
+                for k, br in self._breakers.items()}
+
+    def metrics(self) -> dict:
+        out = {
+            "latency": self.latency.summary().as_dict(),
+            "stats": dict(self.stats),
+            "breakers": self.breaker_states(),
+            "fenced": self.supervisor.fenced() if self.supervisor else [],
+            "rejected_beats": (self.supervisor.rejected_beats
+                               if self.supervisor else 0),
+            "service_plan": (dataclasses.asdict(self.service_plan)
+                             if self.service_plan else None),
+            "registry": obs.metrics_snapshot(),
+        }
+        if self.injector is not None:
+            out["chaos"] = self.injector.snapshot()
+        return out
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True, cancel_futures=True)
+        if self.injector is not None and fault_injection.active() \
+                is self.injector:
+            fault_injection.uninstall()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def _cheapest_tier(accuracy: float) -> str:
+    """Cheapest precision tier whose rtol clears ``accuracy`` — the
+    planner's accuracy ladder, reused for load-shed downgrades."""
+    admissible = [t for t in TIER_ORDER if TIER_RTOL[t] <= accuracy]
+    return admissible[-1] if admissible else TIER_ORDER[0]
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+__all__ = ["ResilienceConfig", "ResilientAnswer", "ResilientEngine",
+           "CircuitBreaker"]

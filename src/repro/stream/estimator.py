@@ -40,7 +40,7 @@ from typing import Dict, NamedTuple, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import fault_injection, obs
 from repro.core.bandwidth import gaussian_norm_const
 from repro.kernels import ops, spatial
 from repro.stream import delta
@@ -360,6 +360,9 @@ class StreamingSDKDE:
                 return snap
             with obs.span("stream.flush", gen=self.gen,
                           n_live=self.n_live):
+                # chaos hook: a staleness blowout is a flush that stalls,
+                # so queries queue behind the staleness gate
+                fault_injection.fire("stream.flush", gen=self.gen)
                 snap = self._build_snapshot()
             obs.counter("stream.publishes",
                         "snapshot generations published").inc()

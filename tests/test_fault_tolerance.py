@@ -167,3 +167,125 @@ def test_compression_converges_with_feedback():
         got_sum = got_sum + out["g"]
     err = float(jnp.linalg.norm(got_sum - true_sum) / jnp.linalg.norm(true_sum))
     assert err < 0.02, err
+
+# -- fencing epoch (PR 8) -----------------------------------------------------
+
+
+def test_fence_rejects_zombie_beats():
+    clock = [0.0]
+    sup = Supervisor(4, timeout=10.0, clock=lambda: clock[0])
+    for h in range(4):
+        sup.beat(h, 1)
+    clock[0] = 20.0
+    for h in (0, 1, 2):
+        sup.beat(h, 2)
+    plan = sup.restart_plan(fence=True)
+    assert plan["action"] == "shrink" and plan["dead"] == [3]
+    assert sup.fenced() == [3]
+    # the zombie process keeps beating: no epoch, then a stale epoch —
+    # neither may flip the host back to alive
+    assert sup.beat(3, 3) is False
+    assert sup.beat(3, 3, epoch=0) is False
+    assert sup.rejected_beats == 2
+    assert sup.fenced() == [3]
+    assert 3 not in [h for h in sup.hosts if sup.hosts[h].alive]
+
+
+def test_fence_readmission_epoch():
+    clock = [0.0]
+    sup = Supervisor(2, timeout=5.0, clock=lambda: clock[0])
+    sup.fence([1])
+    ep = sup.hosts[1].epoch
+    # a beat carrying the CURRENT epoch is the re-admission handshake
+    assert sup.beat(1, 7, epoch=ep) is True
+    assert sup.fenced() == [] and sup.hosts[1].alive
+    # coordinator-side readmit: refreshes the beat clock too
+    sup.fence([0])
+    clock[0] = 3.0
+    assert sup.readmit(0) == sup.hosts[0].epoch
+    assert sup.fenced() == [] and sup.hosts[0].last_beat == 3.0
+
+
+def test_restart_plan_fencing_is_idempotent():
+    clock = [0.0]
+    sup = Supervisor(3, timeout=1.0, clock=lambda: clock[0])
+    clock[0] = 5.0
+    sup.beat(0, 1)
+    p1 = sup.restart_plan(fence=True)
+    epochs = {h: sup.hosts[h].epoch for h in (1, 2)}
+    # a second sweep sees the same dead set and must not bump epochs again
+    p2 = sup.restart_plan(fence=True)
+    assert p1["dead"] == p2["dead"] == [1, 2]
+    assert {h: sup.hosts[h].epoch for h in (1, 2)} == epochs
+    # default restart_plan never fences (pre-PR-8 behavior preserved)
+    sup2 = Supervisor(2, timeout=1.0, clock=lambda: clock[0])
+    clock[0] = 10.0
+    assert sup2.restart_plan()["dead"] == [0, 1]
+    assert sup2.fenced() == []
+    assert sup2.beat(0, 1) is True
+
+
+# -- restart loop error taxonomy (PR 8) --------------------------------------
+
+
+def test_restart_loop_propagates_real_bugs():
+    """Only InjectedFailure is retried; a genuine step_fn bug must surface."""
+    executed = []
+
+    def step(i):
+        executed.append(i)
+        if i == 3:
+            raise ZeroDivisionError("real bug in step 3")
+
+    loop = RestartLoop(step_fn=step, save_fn=lambda s: None,
+                       restore_fn=lambda: 0, ckpt_every=10)
+    with pytest.raises(ZeroDivisionError, match="real bug"):
+        loop.run(10)
+    assert executed == [0, 1, 2, 3]     # no silent retry loop
+
+
+def test_restart_loop_still_retries_injected_failure():
+    from repro.fault_injection import InjectedFailure  # noqa: F401
+
+    loop = RestartLoop(step_fn=lambda i: None, save_fn=lambda s: None,
+                       restore_fn=lambda: 0, ckpt_every=100)
+    assert loop.run(5, fail_at=2) == 2
+
+
+# -- elastic edge cases (PR 8) ------------------------------------------------
+
+
+def test_rebatch_non_divisible_device_count():
+    # 100 over 7 hosts never tiles exactly: nearest achievable multiple,
+    # with the invariant new_gb == per_dev * dp * mb
+    per_dev, mb, new_gb = rebatch(100, old_dp=4, new_dp=7, microbatches=3)
+    assert per_dev >= 1 and new_gb == per_dev * 7 * mb
+    assert abs(new_gb - 100) <= 7 * mb
+
+
+def test_rebatch_shrink_to_single_host():
+    per_dev, mb, new_gb = rebatch(256, old_dp=16, new_dp=1, microbatches=8)
+    assert new_gb == 256 and per_dev * mb == 256
+
+
+def test_plan_mesh_awkward_counts():
+    # prime count: model axis folds down to 1, everything becomes data
+    p = plan_mesh(7, model_parallel=16)
+    assert p.shape == (7, 1) and p.n_devices == 7
+    # single device
+    p = plan_mesh(1, model_parallel=16)
+    assert p.n_devices == 1
+    # non-dividing want_pods falls back to a 2-axis mesh
+    p = plan_mesh(256, model_parallel=16, want_pods=3)
+    assert p.axes == ("data", "model")
+
+
+def test_reshard_specs_vanished_tuple_axis():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.elastic import make_mesh
+
+    plan = plan_mesh(1, model_parallel=1)
+    mesh = make_mesh(plan)
+    # a dim sharded ONLY over vanished axes becomes fully replicated
+    specs = reshard_specs({"w": P(("pod",), None)}, ("pod", "data"), mesh)
+    assert specs["w"].spec == P(None, None)

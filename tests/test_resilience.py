@@ -1,0 +1,315 @@
+"""Resilient serving (PR 8): replicated shard dispatch, chaos injection,
+hedging, circuit breakers, fencing, and certified graceful degradation."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kde as ref
+from repro.core.mixtures import mixture_for_dim
+from repro.fault_injection import ChaosConfig, ChaosEvent, FaultInjector
+from repro.kernels import spatial
+from repro.serve import (
+    BadRequest,
+    Degraded,
+    DeadlineExceeded,
+    Overloaded,
+    ResilienceConfig,
+    ResilientEngine,
+    ServeConfig,
+    ServeError,
+    UnknownKey,
+)
+
+D = 3
+N = 384
+
+
+@pytest.fixture(scope="module")
+def data():
+    mix = mixture_for_dim(D)
+    key = jax.random.PRNGKey(0)
+    return mix.sample(key, N), mix.sample(jax.random.fold_in(key, 1), 64)
+
+
+def mk_engine(chaos=None, **rkw):
+    cfg = ServeConfig(backend="jnp", method="sdkde",
+                      min_batch=8, max_batch=32)
+    defaults = dict(shards=2, replicas=2, deadline_ms=30_000.0,
+                    backoff_ms=1.0, hedge_after_ms=1000.0, seed=0)
+    defaults.update(rkw)
+    return ResilientEngine(cfg, ResilienceConfig(**defaults), chaos=chaos)
+
+
+# -- exact recombination -------------------------------------------------------
+
+
+def test_sharded_answer_matches_full_reference(data):
+    x, pool = data
+    with mk_engine() as eng:
+        table = eng.register("k", x, prewarm=False)
+        assert table.n_shards == 2 and table.n_replicas == 2
+        assert sum(table.shard_n) == N
+        y = pool[:24]
+        ans = eng.query("k", y)
+        expect = np.asarray(ref.sdkde_eval(x, y, table.h, block=256))
+        np.testing.assert_allclose(np.asarray(ans.densities), expect,
+                                   rtol=1e-4)
+        assert not ans.degraded and ans.live_shards == (0, 1)
+        assert ans.missing_shards == () and ans.rel_err_bound == 0.0
+
+
+# -- shard partitioning + certificates ----------------------------------------
+
+
+def test_partition_clusters_covers_and_balances():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 8, 500)
+    shard_of = spatial.partition_clusters(labels, 3)
+    assert shard_of.shape == (8,)
+    assert set(shard_of) == {0, 1, 2}           # no empty shard
+    # greedy LPT: largest shard at most ~2x the smallest for iid sizes
+    loads = np.bincount(shard_of[labels], minlength=3)
+    assert loads.min() > 0 and loads.sum() == 500
+    with pytest.raises(ValueError):
+        spatial.partition_clusters(labels, 0)
+    with pytest.raises(ValueError):
+        spatial.partition_clusters(labels, 9)   # more shards than clusters
+
+
+def test_point_mass_bound_dominates_true_mass(data):
+    x, pool = data
+    pts = np.asarray(x, np.float32)[:200]
+    labels = np.asarray(spatial.build_index(pts, seed=0).labels)
+    local = np.unique(labels, return_inverse=True)[1]
+    layout = spatial.cluster_layout(jnp.asarray(pts), local, 64)
+    meta = spatial.tile_metadata(layout.points, layout.real, block=64)
+    h = 0.4
+    inv2h2 = jnp.float32(1.0 / (2 * h * h))
+    y = pool[:32]
+    bound = np.asarray(spatial.point_mass_bound(y, meta, inv2h2), np.float64)
+    d2 = np.sum(
+        (np.asarray(y, np.float64)[:, None, :] - pts[None, :, :]) ** 2, -1)
+    true_mass = np.exp(-d2 / (2 * h * h)).sum(axis=1)
+    assert (bound + 1e-9 >= true_mass).all()
+
+
+# -- chaos survival ------------------------------------------------------------
+
+
+def test_replica_kill_is_survived_exactly(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(
+        ChaosEvent("shard_kill", shard=0, replica=0),), seed=0)
+    with mk_engine(chaos=chaos) as eng:
+        table = eng.register("k", x, prewarm=False)
+        expect = None
+        for i in range(5):
+            y = pool[8 * i:8 * i + 16]
+            ans = eng.query("k", y)
+            assert not ans.degraded
+            expect = np.asarray(ref.sdkde_eval(x, y, table.h, block=256))
+            np.testing.assert_allclose(np.asarray(ans.densities), expect,
+                                       rtol=1e-4)
+        assert eng.stats["dropped"] == 0
+        assert eng.injector.snapshot()["shard_kill"] > 0
+
+
+def test_nan_poison_never_reaches_caller(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(
+        ChaosEvent("nan_poison", shard=0, replica=0),), seed=0)
+    with mk_engine(chaos=chaos) as eng:
+        eng.register("k", x, prewarm=False)
+        for i in range(4):
+            ans = eng.query("k", pool[8 * i:8 * i + 8])
+            assert np.isfinite(np.asarray(ans.densities)).all()
+            assert not ans.degraded
+        assert eng.stats["dropped"] == 0
+
+
+def test_compile_fail_opens_breaker(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(
+        ChaosEvent("compile_fail", shard=0, replica=0),), seed=0)
+    with mk_engine(chaos=chaos, breaker_threshold=2,
+                   breaker_cooldown_s=3600.0) as eng:
+        eng.register("k", x, prewarm=False)
+        for i in range(8):
+            ans = eng.query("k", pool[:8])
+            assert not ans.degraded
+        states = eng.breaker_states()
+        assert any(k.startswith("k/s0r0") and v == "open"
+                   for k, v in states.items()), states
+        # the sibling replica keeps the shard serving: zero drops
+        assert eng.stats["dropped"] == 0
+
+
+def test_hedge_wins_over_slow_replica(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(
+        ChaosEvent("slow_shard", shard=0, replica=0),),
+        slow_ms=300.0, seed=0)
+    with mk_engine(chaos=chaos, hedge_after_ms=20.0) as eng:
+        eng.register("k", x, prewarm=False)
+        eng.query("k", pool[:8])            # compile both replicas
+        for i in range(6):
+            ans = eng.query("k", pool[:8])
+            assert not ans.degraded
+        assert eng.stats["hedges"] > 0
+        assert eng.stats["hedge_wins"] > 0
+        assert eng.stats["dropped"] == 0
+
+
+def test_real_bug_propagates_not_retried(data):
+    x, _ = data
+    with mk_engine() as eng:
+        table = eng.register("k", x, prewarm=False)
+
+        def boom(*a, **kw):
+            raise ZeroDivisionError("real bug, not chaos")
+
+        for r in range(table.n_replicas):
+            table.engines[0][r].query = boom
+        with pytest.raises(ZeroDivisionError, match="real bug"):
+            eng.query("k", jnp.zeros((4, D)))
+
+
+# -- graceful degradation ------------------------------------------------------
+
+
+def test_total_shard_loss_yields_certified_answer(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(ChaosEvent("shard_kill", shard=1),), seed=0)
+    with mk_engine(chaos=chaos, max_retries=1,
+                   degraded_accuracy=10.0) as eng:
+        table = eng.register("k", x, prewarm=False)
+        y = pool[:16]
+        ans = eng.query("k", y)
+        assert ans.degraded and ans.missing_shards == (1,)
+        assert ans.live_shards == (0,)
+        oracle = np.asarray(ref.sdkde_eval(x, y, table.h, block=256),
+                            np.float64)
+        actual = np.abs(np.asarray(ans.densities, np.float64)
+                        - oracle) / oracle
+        bounds = np.asarray(ans.rel_err_bounds, np.float64)
+        # the certificate must dominate the realized error, per query
+        assert (actual <= bounds + 1e-5).all()
+        assert ans.rel_err_bound == pytest.approx(bounds.max())
+        # and the caller asked for exactness -> typed refusal instead
+        with pytest.raises(ServeError):
+            eng.query("k", y, allow_degraded=False)
+
+
+def test_uncertifiable_degradation_is_refused(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(ChaosEvent("shard_kill", shard=1),), seed=0)
+    with mk_engine(chaos=chaos, max_retries=0,
+                   degraded_accuracy=1e-6) as eng:
+        eng.register("k", x, prewarm=False)
+        with pytest.raises(Degraded) as ei:
+            eng.query("k", pool[:8])
+        assert ei.value.bound > ei.value.target == 1e-6
+        assert eng.stats["dropped"] == 1
+
+
+# -- deadlines, shedding, typed errors ----------------------------------------
+
+
+def test_deadline_exceeded_is_typed(data):
+    x, pool = data
+    with mk_engine() as eng:
+        eng.register("k", x, prewarm=False)
+        with pytest.raises(DeadlineExceeded):
+            eng.query("k", pool[:8], deadline_ms=1e-6)
+        assert isinstance(DeadlineExceeded("x"), TimeoutError)
+
+
+def test_deadline_misses_trigger_tier_shedding(data):
+    x, pool = data
+    with mk_engine(shed_after_misses=2, shed_requests=3,
+                   shed_accuracy=5e-2) as eng:
+        eng.register("k", x, prewarm=False)
+        eng.query("k", pool[:8])                       # healthy baseline
+        for _ in range(2):
+            with pytest.raises(DeadlineExceeded):
+                eng.query("k", pool[:8], deadline_ms=1e-6)
+        ans = eng.query("k", pool[:8])
+        assert ans.shed and ans.precision == "bf16"    # ladder downgrade
+        # explicit precision overrides the shed tier
+        ans = eng.query("k", pool[:8], precision="f32")
+        assert ans.precision == "f32"
+        # the episode ends after shed_requests
+        eng.query("k", pool[:8])
+        ans = eng.query("k", pool[:8])
+        assert not ans.shed
+
+
+def test_unknown_key_and_bad_request(data):
+    x, _ = data
+    with mk_engine() as eng:
+        with pytest.raises(UnknownKey):
+            eng.query("nope", jnp.zeros((2, D)))
+        assert isinstance(UnknownKey("k"), KeyError)
+        eng.register("k", x, prewarm=False)
+        with pytest.raises(BadRequest):
+            eng.query("k", jnp.zeros((2, D + 1)))      # wrong dim
+        with pytest.raises(BadRequest):
+            eng.query("k", jnp.zeros((0, D)))          # empty batch
+
+
+def test_overloaded_when_no_live_replica(data):
+    x, pool = data
+    chaos = ChaosConfig(events=(ChaosEvent("shard_kill",),), seed=0)
+    with mk_engine(chaos=chaos, max_retries=0, allow_degraded=False) as eng:
+        eng.register("k", x, prewarm=False)
+        with pytest.raises(Overloaded):
+            eng.query("k", pool[:8])
+
+
+# -- fault injector determinism -----------------------------------------------
+
+
+def _drive(inj: FaultInjector, requests: int = 40):
+    fired = []
+    for _ in range(requests):
+        inj.begin_request()
+        for s in range(2):
+            for r in range(2):
+                with inj.scope(s, r):
+                    try:
+                        inj.fire("serve.dispatch", key="k")
+                        fired.append(0)
+                    except Exception:
+                        fired.append(1)
+    return fired, inj.snapshot()
+
+
+def test_injector_is_deterministic_in_seed():
+    cfg = ChaosConfig(seed=7, shard_kill=0.3)
+    f1, s1 = _drive(FaultInjector(cfg))
+    f2, s2 = _drive(FaultInjector(cfg))
+    assert f1 == f2 and s1 == s2 and s1["shard_kill"] > 0
+    f3, s3 = _drive(FaultInjector(ChaosConfig(seed=8, shard_kill=0.3)))
+    assert f3 != f1                     # the seed actually matters
+
+
+# -- soak acceptance (benchmarks/chaos_soak.py) --------------------------------
+
+
+def test_chaos_soak_acceptance():
+    """The CI soak contract at test size: zero dropped queries across a
+    kill + recovery arc, bounded tail, certified degraded answers."""
+    from benchmarks import chaos_soak
+
+    out = chaos_soak.run_soak(n=512, d=3, requests=18, pace_s=0.002,
+                              heartbeat_timeout_s=0.5, seed=0)
+    assert out["dropped"] == 0
+    assert out["p99_ratio"] < chaos_soak.P99_RATIO_MAX
+    deg = chaos_soak.run_degraded(n=512, d=3, requests=3, query_rows=32,
+                                  seed=0)
+    assert deg["bound_violations"] == 0
+    assert deg["rel_err_bound_max"] <= chaos_soak.DEGRADED_ACCURACY
+    assert deg["rel_err_actual_max"] <= deg["rel_err_bound_max"] + 1e-5
