@@ -1,0 +1,366 @@
+"""Overload soak: open-loop burst traffic through the admission frontend.
+
+The acceptance story of the admission layer (PR 9), run as a benchmark
+cell so CI tracks it per PR.  A steady → 4× burst → recovery arrival arc
+is replayed open-loop (arrivals do NOT wait for answers — the only
+regime where admission control matters) against an ``AsyncFrontend``
+over a plain ``ServeEngine``:
+
+  1. **Probe** — an open-loop submit-all-then-drain burst measures the
+     pipeline's serving capacity (requests/s) and its p99; both
+     calibrate the arc.
+  2. **Steady** — arrivals at half the measured capacity: everything
+     should be answered, no shedding.
+  3. **Burst** — arrivals at 4× capacity: the queue fills, the state
+     machine walks accepting → backpressure → shedding, AIMD collapses
+     the admitted rate, excess arrivals get *typed* ``Overloaded``.
+  4. **Settle** — steady-rate arrivals while the burst backlog (bounded
+     by the queue) drains and AIMD climbs back; counted for the
+     silent-drop ledger but excluded from the goodput bars.  The
+     recovery clock then holds until the queue actually empties (a
+     bounded wait — queued entries expire, typed, at their deadline),
+     so recovery measures the recovered steady state, never the drain
+     transient.
+  5. **Recovery** — back to the steady rate: admission is reopened and
+     goodput must be back at the steady level.
+
+The probe is a wall-clock measurement at CPU scale, so it can under-read
+the true serving rate (cold dispatcher thread, scheduler noise mid
+suite) — and a "4× capacity" burst computed from an under-read is no
+burst at all.  When a burst sheds nothing the arc is replayed with the
+burst factor doubled (4× → 8× → … up to ``max_burst_factor``) until
+overload actually engages; the acceptance bars are judged on the arc
+that engaged.  Only if the ceiling factor *still* sheds nothing does the
+cell fail — at that point the queue genuinely never filled and the cell
+proved nothing.
+
+The bars also assume the probed capacity still holds when the arc runs;
+on shared CPU the machine's real capacity can swing several-fold within
+one run.  When a bar would fail, the capacity is re-probed: if it
+drifted more than 25% the miss indicts the environment rather than the
+policy, and the arc is re-run (loudly, at most twice) against the fresh
+probe.  A failure with a *stable* re-probe stands — that one is the
+admission layer's fault.
+
+HARD-FAILS (raises, which fails the suite and therefore the regression
+gate) when the overload contract is violated:
+
+  * **any silent drop** — every submitted request must resolve as an
+    answer, ``Overloaded``, or ``DeadlineExceeded`` (certified Degraded
+    counts as answered); the frontend's own ledger must balance too;
+  * **unbounded tail** — answered-request p99 above ``2 ×
+    max(steady_p99, probe_p99, p99_floor_s)``.  Every request carries
+    exactly that value as its deadline and both the queue and the engine
+    raise typed ``DeadlineExceeded`` past it, so this bar is enforced
+    *structurally*, not statistically.  The floor exists because
+    CPU-scale latencies are milliseconds and a 2× ratio of scheduler
+    noise means nothing (same reasoning as chaos_soak's floored ratio);
+  * **goodput collapse** — answered requests/s through the burst AND the
+    recovery phase each below ``goodput_frac`` (80%) of the measured
+    steady-phase goodput;
+  * **overload never engaged** — a burst that sheds nothing even at the
+    escalation ceiling means the arc never exceeded capacity and the
+    cell proved nothing.
+
+The gated ``overload_acceptance`` cell follows the streaming_acceptance
+precedent: its ratio is wall-clock-derived, so the committed baseline
+pins ``modeled_speedup`` at the *target* (1.0 ≡ goodput exactly at the
+80% bar) and the gate enforces "still past target", with the hard raises
+above as the real teeth.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core.mixtures import mixture_for_dim
+from repro.serve import (AsyncFrontend, DeadlineExceeded, FrontendConfig,
+                         Overloaded, ServeConfig, ServeEngine)
+
+#: Goodput through burst + recovery, as a fraction of steady goodput.
+GOODPUT_FRAC = 0.8
+#: Answered p99 bar: 2 × the (floored) steady p99.
+P99_RATIO_MAX = 2.0
+#: Latency floor under the p99 bar AND the per-request deadline — below
+#: this, CPU-scale ratios measure the scheduler, not the policy.
+P99_FLOOR_S = 0.1
+#: Burst arrival rate, as a multiple of measured capacity (ISSUE 9).
+BURST_FACTOR = 4.0
+#: Escalation ceiling: the burst factor doubles while nothing sheds,
+#: so a probe that under-read capacity cannot produce a vacuous cell.
+MAX_BURST_FACTOR = 64.0
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def run_overload(
+    n: int = 2048,
+    d: int = 4,
+    probe_requests: int = 96,
+    phase_s: float = 0.6,
+    max_rows: int = 8,
+    max_queue: int = 64,
+    max_burst_arrivals: int = 2000,
+    seed: int = 0,
+    goodput_frac: float = GOODPUT_FRAC,
+    max_burst_factor: float = MAX_BURST_FACTOR,
+) -> dict:
+    """The steady → 4× burst → recovery arc.  Returns the stats dict
+    (also emitted as cells); raises on any violated overload bar."""
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = mix.sample(key, n)
+    pool = np.asarray(mix.sample(jax.random.fold_in(key, 1), 1024),
+                      np.float32)
+    rng = np.random.default_rng(seed)
+
+    cfg = ServeConfig(backend="jnp", method="sdkde",
+                      min_batch=16, max_batch=64)
+    eng = ServeEngine(cfg)
+    eng.register("soak", x)
+    for b in cfg.bucket_sizes():          # warm: measure policy, not JIT
+        eng.query("soak", pool[:b])
+        eng.query("soak", pool[:b], precision="bf16")   # brownout tier
+
+    # -- probe: OPEN-loop capacity + dispatch p99 -------------------------
+    # Capacity must be measured the way the arc will load the system:
+    # all-at-once submission through the continuous batcher (a closed
+    # loop would measure per-request round-trip overhead and report a
+    # "capacity" the fused path beats 10x over — making a 4x burst of it
+    # no burst at all).
+    def _probe() -> tuple:
+        fe = AsyncFrontend(eng, FrontendConfig(
+            workers=1, max_queue=probe_requests + 8, batch_wait_ms=1.0,
+            default_deadline_ms=60_000.0))
+        lats: List[float] = []
+        t0 = time.perf_counter()
+        for _ in range(probe_requests):
+            m = int(rng.integers(1, max_rows + 1))
+            off = int(rng.integers(0, pool.shape[0] - m))
+            f = fe.submit("soak", pool[off:off + m])
+            f.add_done_callback(
+                lambda f, ts=time.perf_counter():
+                lats.append(time.perf_counter() - ts))
+        fe.drain(timeout=60.0)
+        wall = time.perf_counter() - t0
+        fe.close()
+        # p99 includes probe queueing: the saturated-pipeline round trip
+        return probe_requests / wall, _pct(lats, 99)
+
+    capacity, probe_p99 = _probe()
+
+    # every request's deadline IS the p99 bar: late answers become typed
+    # DeadlineExceeded (queue expiry or engine post-check), so the
+    # answered-p99 acceptance bar holds by construction
+    deadline_s = P99_RATIO_MAX * max(probe_p99, P99_FLOOR_S)
+
+    def _arc(burst_factor: float) -> tuple:
+        """One steady → burst → recovery replay at the given factor."""
+        fe = AsyncFrontend(eng, FrontendConfig(
+            workers=1, max_queue=max_queue, batch_wait_ms=1.0,
+            default_deadline_ms=1e3 * deadline_s,
+            rate=capacity, burst=max(8.0, capacity / 8),
+            # the AIMD floor must clear the steady/recovery arrival rate
+            # (0.5 x capacity): the bucket's job is to clip the burst,
+            # and a floor below the steady rate lets a collapsed
+            # controller lawfully shed recovery traffic it could serve,
+            # failing the goodput bar on controller hysteresis alone
+            min_rate=0.55 * capacity,
+            aimd_increase=max(8.0, capacity / 4),
+            p99_slo_ms=1e3 * deadline_s))
+        burst_s = min(phase_s,
+                      max_burst_arrivals / (burst_factor * capacity))
+        # the settle window absorbs the backlog drain (bounded by
+        # max_queue entries) and AIMD's additive climb back, so
+        # "recovery" measures the post-recovery steady state rather
+        # than the drain transient; settle traffic still counts for the
+        # silent-drop ledger, just not for the goodput bars
+        phases = (("steady", 0.5 * capacity, phase_s),
+                  ("burst", burst_factor * capacity, burst_s),
+                  ("settle", 0.5 * capacity,
+                   min(max_queue / capacity, phase_s)),
+                  ("recovery", 0.5 * capacity, phase_s))
+        durations = {name: dur for name, _, dur in phases}
+        done_at: Dict[int, float] = {}
+        futs: List[tuple] = []            # (phase, submit_t, i, future)
+        counts = {p: {"arrived": 0, "answered": 0, "shed": 0,
+                      "expired": 0, "degraded": 0} for p, _, _ in phases}
+
+        i = 0
+        offset = 0.0                      # schedule origin of the phase
+        clock0 = time.perf_counter()
+        for name, rate, dur in phases:
+            t = 0.0
+            while t < dur:
+                at = offset + t
+                while (now := time.perf_counter() - clock0) < at:
+                    time.sleep(min(2e-3, at - now))
+                m = int(rng.integers(1, max_rows + 1))
+                off = int(rng.integers(0, pool.shape[0] - m))
+                counts[name]["arrived"] += 1
+                t += 1.0 / rate
+                i += 1
+                try:
+                    f = fe.submit("soak", pool[off:off + m],
+                                  deadline_s=deadline_s)
+                except Overloaded:
+                    counts[name]["shed"] += 1
+                    continue
+                f.add_done_callback(
+                    lambda f, j=i:
+                    done_at.__setitem__(j, time.perf_counter()))
+                futs.append((name, time.perf_counter(), i, f))
+            offset += dur
+            if name == "settle":
+                # "recovery" must measure the recovered steady state,
+                # not the backlog drain: hold the recovery clock until
+                # the queue actually empties.  Bounded — every queued
+                # entry expires (typed) at its deadline, so the wait
+                # cannot exceed roughly one deadline
+                limit = time.perf_counter() + deadline_s + phase_s
+                while (fe._heap or fe._inflight) and \
+                        time.perf_counter() < limit:
+                    time.sleep(2e-3)
+                offset = max(offset, time.perf_counter() - clock0)
+        if not fe.drain(timeout=30.0):
+            # a wedged queue is its own failure mode — do not let the
+            # still-pending futures read as silent drops below
+            raise RuntimeError(
+                "overload soak: frontend failed to drain within 30s — "
+                f"{len(fe._heap)} queued, {fe._inflight} inflight")
+
+        unresolved = 0
+        answered: List[tuple] = []        # (phase, latency_s)
+        for phase, ts, i, f in futs:
+            if not f.done():
+                unresolved += 1
+                continue
+            if f.exception() is None:
+                counts[phase]["answered"] += 1
+                counts[phase]["degraded"] += int(f.result().degraded)
+                answered.append((phase, done_at[i] - ts))
+            elif isinstance(f.exception(), DeadlineExceeded):
+                counts[phase]["expired"] += 1
+            elif isinstance(f.exception(), Overloaded):
+                counts[phase]["shed"] += 1
+            else:
+                raise f.exception()       # a real bug is a real failure
+        rep = fe.report()
+        silent = fe.unaccounted() + unresolved
+        fe.close()
+        return counts, answered, durations, rep, silent
+
+    for attempt in range(3):
+        # the probe wall can under-read capacity at CPU scale; escalate
+        # the burst until the overload contract is actually exercised
+        burst_factor = BURST_FACTOR
+        while True:
+            counts, answered, durations, rep, silent = _arc(burst_factor)
+            if silent or counts["burst"]["shed"] or \
+                    burst_factor * 2 > max_burst_factor:
+                break
+            burst_factor *= 2
+            print(f"# overload: {burst_factor / 2:g}x burst shed nothing "
+                  f"(probe under-read capacity?) — escalating to "
+                  f"{burst_factor:g}x")
+
+        answered_lat = [l for _, l in answered]
+        steady_p99 = _pct([l for p, l in answered if p == "steady"], 99)
+        p99_bar = P99_RATIO_MAX * max(steady_p99, probe_p99, P99_FLOOR_S)
+        answered_p99 = _pct(answered_lat, 99)
+        goodput = {p: counts[p]["answered"] / durations[p] for p in counts}
+        # floor: an idle steady phase (tiny test sizes) cannot make the
+        # ratio degenerate
+        ratio = min(goodput["burst"], goodput["recovery"]) / max(
+            goodput["steady"], 1e-9)
+
+        if silent:
+            break            # a ledger hole is a bug in any environment
+        if (answered_p99 <= p99_bar and ratio >= goodput_frac
+                and counts["burst"]["shed"]) or attempt == 2:
+            break
+        # the bars assume the probed capacity still holds; on shared CPU
+        # the machine's real capacity can swing several-fold mid-arc.
+        # Re-probe: if capacity drifted, the miss indicts the
+        # environment, not the policy — re-run against the fresh probe.
+        # A stable re-probe lets the failure stand.
+        cap2, p99_2 = _probe()
+        drift = abs(cap2 / capacity - 1.0)
+        if drift <= 0.25:
+            break
+        print(f"# overload: capacity drifted {capacity:.1f} -> "
+              f"{cap2:.1f} rps ({drift:.0%}) across the arc — "
+              f"nonstationary environment, re-running on the fresh probe")
+        capacity, probe_p99 = cap2, p99_2
+        deadline_s = P99_RATIO_MAX * max(probe_p99, P99_FLOOR_S)
+
+    out = {
+        "capacity_rps": round(capacity, 1),
+        "burst_factor": burst_factor,
+        "probe_p99_ms": round(1e3 * probe_p99, 3),
+        "deadline_ms": round(1e3 * deadline_s, 1),
+        "answered_p99_ms": round(1e3 * answered_p99, 3),
+        "p99_bar_ms": round(1e3 * p99_bar, 3),
+        "goodput_steady_rps": round(goodput["steady"], 1),
+        "goodput_burst_rps": round(goodput["burst"], 1),
+        "goodput_recovery_rps": round(goodput["recovery"], 1),
+        "goodput_ratio": round(ratio, 3),
+        "silent_drops": silent,
+        "shed_burst": counts["burst"]["shed"],
+        "admit_rate_final": rep["admit_rate"],
+        "transitions": len(rep["transitions"]),
+        **{f"{p}_{k}": v for p, c in counts.items() for k, v in c.items()},
+    }
+    common.emit("overload_soak", n=n, d=d, **out)
+    common.emit(
+        "overload_acceptance", n=n, d=d,
+        modeled_speedup=round(ratio / goodput_frac, 2), target_speedup=1.0,
+        goodput_ratio=round(ratio, 3), p99_ok=answered_p99 <= p99_bar,
+        note="baseline pinned at target_speedup: ratio is "
+             "wall-clock-derived (see check_regression docstring)")
+
+    if silent:
+        raise RuntimeError(
+            f"overload soak lost {silent} requests without a typed outcome "
+            f"— every request must resolve as answered, Overloaded, or "
+            f"DeadlineExceeded")
+    if answered_p99 > p99_bar:
+        raise RuntimeError(
+            f"answered p99 {1e3 * answered_p99:.1f}ms exceeds the bar "
+            f"{1e3 * p99_bar:.1f}ms (2x floored steady p99) — the deadline "
+            f"machinery failed to cap the tail")
+    if ratio < goodput_frac:
+        raise RuntimeError(
+            f"goodput through burst/recovery is {ratio:.0%} of steady "
+            f"(bar: >= {goodput_frac:.0%}) — admission control is "
+            f"collapsing throughput instead of protecting it")
+    if not out["shed_burst"]:
+        raise RuntimeError(
+            f"nothing shed even at a {burst_factor:g}x burst — overload "
+            f"never engaged, the cell measured an underloaded system")
+    return out
+
+
+def main(n: int = 2048, d: int = 4, phase_s: float = 0.6,
+         seed: int = 0) -> None:
+    run_overload(n=n, d=d, phase_s=phase_s, seed=seed)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--phase-s", type=float, default=0.6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(n=args.n, d=args.d, phase_s=args.phase_s, seed=args.seed)

@@ -28,6 +28,7 @@ from benchmarks import (
     fig4_fusion,
     fig5_utilization,
     obs_overhead,
+    overload_soak,
     planner_cells,
     precision_sweep,
     pruning_sweep,
@@ -102,6 +103,11 @@ def main() -> None:
          "HARD-FAILS on any dropped query or a lying error certificate "
          "(serve/resilience.py, fault_injection.py)",
          chaos_soak.main, n=2048, d=4, requests=48)
+    _run("overload", "admission frontend soak: open-loop steady -> 4x "
+         "burst -> recovery through the continuous batcher — HARD-FAILS "
+         "on any silent drop, an uncapped tail, or collapsed goodput "
+         "(serve/frontend.py, benchmarks/overload_soak.py)",
+         overload_soak.main, n=2048, d=4, phase_s=0.6)
     total = time.time() - t0
     # embed the process-wide metrics snapshot the suite itself produced —
     # cache hit rates, prune occupancies, tuner decisions — so the perf

@@ -25,6 +25,14 @@ Failure modes and where they strike:
   ``staleness_blowout``  slow snapshot rebuild:   ``stream.flush``
                        the flush sleeps, queries  (stream/estimator.py)
                        pile up behind staleness
+  ``client_burst``     traffic surge: the admit   ``serve.admit``
+                       hook reports a burst of    (serve/frontend.py)
+                       ``burst_factor`` synthetic
+                       admissions (``burst()``)
+  ``admit_stall``      stalled admission thread:  ``serve.admit``
+                       the admit path sleeps
+                       ``slow_ms``, arrivals
+                       back up behind it
   ===================  =========================  ==========================
 
 Each mode is a probability in [0, 1] drawn per *injection opportunity*
@@ -58,7 +66,7 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import numpy as np
 
 MODES = ("shard_kill", "slow_shard", "compile_fail", "nan_poison",
-         "staleness_blowout")
+         "staleness_blowout", "client_burst", "admit_stall")
 
 #: Which failure modes each injection point consults.
 POINT_MODES: Dict[str, Tuple[str, ...]] = {
@@ -67,6 +75,7 @@ POINT_MODES: Dict[str, Tuple[str, ...]] = {
     "serve.result": ("nan_poison",),
     "registry.fit": ("compile_fail",),
     "stream.flush": ("staleness_blowout",),
+    "serve.admit": ("client_burst", "admit_stall"),
 }
 
 _MODE_ID = {m: i for i, m in enumerate(MODES)}
@@ -137,7 +146,11 @@ class ChaosConfig:
     compile_fail: float = 0.0
     nan_poison: float = 0.0
     staleness_blowout: float = 0.0
+    client_burst: float = 0.0
+    admit_stall: float = 0.0
     slow_ms: float = 50.0
+    #: Synthetic admissions injected per fired ``client_burst`` opportunity.
+    burst_factor: int = 4
     events: Tuple[ChaosEvent, ...] = ()
 
     def __post_init__(self):
@@ -147,6 +160,9 @@ class ChaosConfig:
                 raise ValueError(f"chaos probability {m}={p} outside [0, 1]")
         if self.slow_ms < 0:
             raise ValueError(f"slow_ms must be >= 0, got {self.slow_ms}")
+        if self.burst_factor < 1:
+            raise ValueError(
+                f"burst_factor must be >= 1, got {self.burst_factor}")
         object.__setattr__(self, "events", tuple(self.events))
 
     @classmethod
@@ -162,7 +178,8 @@ class ChaosConfig:
         if isinstance(modes, str):
             modes = [m.strip() for m in modes.split(",") if m.strip()]
         rates = {"shard_kill": 0.1, "slow_shard": 0.2, "compile_fail": 0.3,
-                 "nan_poison": 0.1, "staleness_blowout": 0.5}
+                 "nan_poison": 0.1, "staleness_blowout": 0.5,
+                 "client_burst": 0.15, "admit_stall": 0.1}
         kw: dict = {"seed": seed, "slow_ms": slow_ms}
         events = []
         for m in modes:
@@ -250,11 +267,13 @@ class FaultInjector:
         shard = ctx.get("shard", self._scope.shard)
         replica = ctx.get("replica", self._scope.replica)
         for mode in POINT_MODES.get(point, ()):
-            if mode == "nan_poison" or not self._active(mode, point, shard,
-                                                        replica):
+            # value-shaped modes have dedicated hooks (poison / burst);
+            # fire() only raises or delays
+            if mode in ("nan_poison", "client_burst") or not self._active(
+                    mode, point, shard, replica):
                 continue
             self._count(mode)
-            if mode in ("slow_shard", "staleness_blowout"):
+            if mode in ("slow_shard", "staleness_blowout", "admit_stall"):
                 time.sleep(self.config.slow_ms / 1e3)
             else:
                 raise InjectedFailure(mode, shard=shard, replica=replica,
@@ -268,6 +287,22 @@ class FaultInjector:
             self._count("nan_poison")
             return value * float("nan")
         return value
+
+    def burst(self, point: str) -> int:
+        """Synthetic admissions to inject at ``point`` (0 = none).
+
+        ``client_burst`` simulates a traffic surge rather than a broken
+        component, so instead of raising it *reports load*: the admission
+        front end asks this hook per real arrival and enqueues the
+        returned number of synthetic duplicate requests — genuine queue
+        pressure that exercises backpressure/shedding deterministically.
+        """
+        shard, replica = self._scope.shard, self._scope.replica
+        if "client_burst" in POINT_MODES.get(point, ()) and self._active(
+                "client_burst", point, shard, replica):
+            self._count("client_burst")
+            return int(self.config.burst_factor)
+        return 0
 
     def snapshot(self) -> Dict[str, int]:
         with self._lock:
@@ -320,8 +355,14 @@ def poison(point: str, value):
     return value if inj is None else inj.poison(point, value)
 
 
+def burst(point: str) -> int:
+    """Hook: synthetic admissions to inject at ``point`` (0 when quiet)."""
+    inj = _ACTIVE
+    return 0 if inj is None else inj.burst(point)
+
+
 __all__ = [
     "MODES", "POINT_MODES", "InjectedFailure", "ChaosEvent", "ChaosConfig",
     "FaultInjector", "install", "uninstall", "installed", "active",
-    "fire", "poison",
+    "fire", "poison", "burst",
 ]

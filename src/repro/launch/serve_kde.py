@@ -89,10 +89,31 @@ def main():
     ap.add_argument("--chaos", default=None, metavar="MODES",
                     help="comma-separated fault modes to inject "
                          "(shard_kill,slow_shard,compile_fail,nan_poison,"
-                         "staleness_blowout); shard_kill also schedules a "
-                         "sustained kill + recovery window")
+                         "staleness_blowout,client_burst,admit_stall); "
+                         "shard_kill also schedules a sustained kill + "
+                         "recovery window")
     ap.add_argument("--deadline-ms", type=float, default=5000.0,
-                    help="per-request deadline (resilient mode)")
+                    help="per-request deadline (resilient and open-loop "
+                         "modes)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="drive traffic open-loop through the admission "
+                         "front end (repro.serve.AsyncFrontend): arrivals "
+                         "are paced by --qps, not by answers, so overload "
+                         "actually overloads; closed-loop stays the "
+                         "default")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop steady arrival rate in requests/s "
+                         "(0 = auto: half the probed capacity)")
+    ap.add_argument("--burst", type=float, default=4.0,
+                    help="mid-run burst arrival rate, as a multiple of "
+                         "the steady --qps (open-loop mode)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission queue bound (open-loop mode)")
+    ap.add_argument("--expect-shed", action="store_true",
+                    help="exit nonzero unless the run shed at least one "
+                         "request with a typed Overloaded AND every "
+                         "request resolved (the CI overload smoke "
+                         "contract)")
     ap.add_argument("--metrics-json", metavar="PATH", default=None,
                     help="write a telemetry document (metrics snapshot, "
                          "Prometheus exposition, trace events if --trace) "
@@ -131,6 +152,13 @@ def main():
         stream=args.stream, plan=args.plan,
         accuracy_target=args.accuracy_target, **knobs,
     )
+
+    if args.open_loop:
+        if args.stream:
+            ap.error("--open-loop and --stream are mutually exclusive "
+                     "(drive streaming updates closed-loop)")
+        _run_open_loop(args, cfg, x, pool)
+        return
 
     if args.replicas > 1 or args.chaos:
         if args.stream:
@@ -271,6 +299,156 @@ def main():
         print(f"telemetry: {n_metrics} registry metrics"
               + (f", {len(events)} trace events" if args.trace else "")
               + f" -> {args.metrics_json}")
+
+
+def _run_open_loop(args, cfg, x, pool) -> None:
+    """Open-loop traffic through the admission front end.
+
+    Arrivals follow a steady → burst → steady schedule paced by the
+    wall clock, NOT by answers — the regime where the admission queue,
+    backpressure, and shedding actually engage.  Reports the frontend's
+    full shed/brownout ledger; with ``--expect-shed`` (the CI smoke
+    contract) exits nonzero unless at least one request was shed with a
+    typed ``Overloaded`` and every submitted request resolved.
+    """
+    import json
+    import sys
+
+    from repro.fault_injection import ChaosConfig, FaultInjector
+    from repro import fault_injection
+    from repro.serve import (AsyncFrontend, FrontendConfig, Overloaded,
+                             ResilienceConfig, ResilientEngine, ServeError)
+
+    resilient = args.replicas > 1
+    if resilient:
+        eng = ResilientEngine(cfg, ResilienceConfig(
+            shards=args.shards, replicas=args.replicas,
+            deadline_ms=args.deadline_ms, seed=args.seed, backoff_ms=1.0))
+    else:
+        eng = ServeEngine(cfg)
+    t0 = time.perf_counter()
+    prep = eng.register("traffic", x)
+    h = getattr(prep, "h", None)
+    print(f"registered: backend={cfg.backend} method={args.method} "
+          f"n={args.n} d={args.d} h={h:.4f} "
+          f"fit={1e3 * (time.perf_counter() - t0):.0f}ms"
+          + (f" ({args.shards} shards x {args.replicas} replicas)"
+             if resilient else ""))
+    if args.chaos:
+        print(f"chaos: {args.chaos} seed={args.seed}")
+
+    rng = np.random.default_rng(args.seed)
+    # warm the buckets the traffic will hit, then probe capacity with a
+    # saturated all-at-once window if --qps was not pinned
+    eng_q = (lambda y: eng.query("traffic", y).densities) if resilient \
+        else (lambda y: eng.query("traffic", y))
+    for b in cfg.bucket_sizes():
+        eng_q(pool[:b])
+    qps = args.qps
+    if qps <= 0:
+        probe = AsyncFrontend(eng, FrontendConfig(
+            workers=1, max_queue=72, default_deadline_ms=60_000.0))
+        t0 = time.perf_counter()
+        fs = []
+        for _ in range(64):
+            m = int(rng.integers(1, max(2, args.max_batch // 8)))
+            off = int(rng.integers(0, pool.shape[0] - m))
+            fs.append(probe.submit("traffic", pool[off:off + m]))
+        probe.drain(timeout=60.0)
+        probe.close()
+        qps = 0.5 * 64 / (time.perf_counter() - t0)
+        print(f"probed capacity: steady qps auto-set to {qps:.0f}")
+
+    injector = None
+    if args.chaos and not resilient:
+        # installed AFTER the probe so chaos hits the measured run, not
+        # the capacity measurement; the resilient engine installs its own
+        injector = fault_injection.install(FaultInjector(
+            ChaosConfig.from_modes(args.chaos, requests=args.requests,
+                                   seed=args.seed)))
+    fe = AsyncFrontend(eng, FrontendConfig(
+        workers=1, max_queue=args.max_queue,
+        default_deadline_ms=args.deadline_ms,
+        rate=max(qps, 8.0), p99_slo_ms=args.deadline_ms))
+    # steady for the first/last third, --burst x in the middle
+    third = max(args.requests // 3, 1)
+    futs, shed, answered, expired, degraded, browned = [], 0, 0, 0, 0, 0
+    start = time.perf_counter()
+    t_next = 0.0
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        rate = qps * (args.burst if third <= i < 2 * third else 1.0)
+        while (now := time.perf_counter() - start) < t_next:
+            time.sleep(min(2e-3, t_next - now))
+        t_next += 1.0 / rate
+        m = int(rng.integers(1, max(2, args.max_batch // 8)))
+        off = int(rng.integers(0, pool.shape[0] - m))
+        try:
+            futs.append(fe.submit("traffic", pool[off:off + m]))
+        except Overloaded:
+            shed += 1
+    fe.drain(timeout=60.0)
+    wall = time.perf_counter() - t0
+    unresolved = 0
+    for f in futs:
+        if not f.done():
+            unresolved += 1
+        elif f.exception() is None:
+            answered += 1
+            degraded += int(f.result().degraded)
+            browned += int(f.result().browned)
+        elif isinstance(f.exception(), Overloaded):
+            shed += 1
+        elif isinstance(f.exception(), ServeError):
+            expired += 1
+        else:
+            raise f.exception()
+
+    rep = fe.report()
+    silent = fe.unaccounted() + unresolved
+    print(f"open-loop: {args.requests} arrivals in {wall:.2f}s "
+          f"(steady {qps:.0f} rps, burst x{args.burst:g}): "
+          f"answered={answered} shed={shed} expired={expired} "
+          f"degraded={degraded} browned={browned} silent={silent}")
+    print(f"admission: state={rep['state']} "
+          f"rejected_by={rep['rejected_by']} "
+          f"admit_rate={rep['admit_rate']:.0f} rps "
+          f"queue_wait p50={rep['queue_wait_ms']['p50']}ms "
+          f"p99={rep['queue_wait_ms']['p99']}ms "
+          f"transitions={rep['transitions']}")
+    if injector is not None:
+        print(f"faults injected: {injector.snapshot()}")
+
+    if args.metrics_json:
+        doc = {
+            "args": {k: v for k, v in vars(args).items()
+                     if isinstance(v, (int, float, str, bool, type(None)))},
+            "frontend": rep,
+            "outcomes": {"answered": answered, "shed": shed,
+                         "expired": expired, "degraded": degraded,
+                         "browned": browned, "silent": silent},
+            "metrics": obs.metrics_snapshot(),
+            "prometheus": obs.prometheus_text(),
+            "trace_events": obs.trace_events() if args.trace else [],
+        }
+        with open(args.metrics_json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"telemetry: {len(doc['metrics'])} registry metrics "
+              f"-> {args.metrics_json}")
+
+    fe.close()
+    if resilient:
+        eng.close()
+    if injector is not None:
+        fault_injection.uninstall()
+    if silent:
+        print(f"FAIL: {silent} requests without a typed outcome",
+              file=sys.stderr)
+        sys.exit(1)
+    if args.expect_shed and not shed:
+        print("FAIL: --expect-shed but the run shed nothing (raise "
+              "--burst or lower --max-queue)", file=sys.stderr)
+        sys.exit(1)
 
 
 def _run_resilient(args, cfg, x, pool) -> None:

@@ -18,6 +18,9 @@ from repro.serve.config import Backend, Method, ServeConfig
 from repro.serve.engine import ServeEngine
 from repro.serve.errors import (BadRequest, DeadlineExceeded, Degraded,
                                 Overloaded, ServeError, UnknownKey)
+from repro.serve.frontend import (AdmissionStateMachine, AimdController,
+                                  AsyncFrontend, FrontendAnswer,
+                                  FrontendConfig, TokenBucket)
 from repro.serve.registry import EstimatorRegistry, PreparedEstimator
 from repro.serve.resilience import (ResilienceConfig, ResilientAnswer,
                                     ResilientEngine)
@@ -28,6 +31,8 @@ __all__ = [
     "EstimatorRegistry", "PreparedEstimator",
     "ServeEngine",
     "ResilienceConfig", "ResilientAnswer", "ResilientEngine",
+    "AsyncFrontend", "FrontendAnswer", "FrontendConfig",
+    "AdmissionStateMachine", "AimdController", "TokenBucket",
     "ServeError", "UnknownKey", "BadRequest", "DeadlineExceeded",
     "Overloaded", "Degraded",
     "ShapeBucketCache", "coalesce", "pad_queries", "split",

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro import fault_injection, obs
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
 from repro.serve.config import ServeConfig
-from repro.serve.errors import BadRequest
+from repro.serve.errors import BadRequest, DeadlineExceeded
 from repro.serve.registry import EstimatorRegistry, PreparedEstimator
 from repro.serve.stats import LatencyRecorder
 
@@ -107,39 +107,57 @@ class ServeEngine:
     # -- query path ------------------------------------------------------
 
     def query(self, key: str, y: jnp.ndarray,
-              precision: Optional[str] = None) -> jnp.ndarray:
+              precision: Optional[str] = None,
+              deadline_s: Optional[float] = None) -> jnp.ndarray:
         """Densities for one request; pads to a bucket, times the dispatch.
 
         ``precision`` overrides the config's GEMM-operand tier for this
         request (pallas backend; prepared train tensors are cached per
         tier, so mixing tiers on one estimator costs one extra prepare).
+
+        ``deadline_s`` is an absolute ``time.monotonic()`` instant: a
+        request whose deadline has already passed raises
+        ``DeadlineExceeded`` before any compute, and an answer that
+        completes past it raises too — a late density is not an answer
+        (the admission front end propagates its per-request deadlines
+        here, so plain engines honor them like ``ResilientEngine`` does).
         """
         prep = self.registry.get(key)
         y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
         self._check_query(prep, y)
+        self._check_deadline(key, deadline_s, phase="dispatch")
         with obs.span("serve.request", key=key, rows=int(y.shape[0]),
                       requests=1):
             t0 = time.perf_counter()
             dens = jax.block_until_ready(fault_injection.poison(
                 "serve.result", self._dispatch(prep, y, precision)))
             dt = time.perf_counter() - t0
+        self._check_deadline(key, deadline_s, phase="answer")
         self._note_served(dt, y.shape[0], 1)
         return dens
 
     def query_many(
         self, key: str, batches: Sequence[jnp.ndarray],
         precision: Optional[str] = None,
+        deadline_s: Optional[float] = None,
     ) -> List[jnp.ndarray]:
-        """Coalesce several ragged requests into one padded dispatch."""
+        """Coalesce several ragged requests into one padded dispatch.
+
+        ``deadline_s`` (absolute monotonic) covers the fused dispatch:
+        callers batching requests with distinct deadlines should pass the
+        *latest* one and re-check the earlier deadlines per member.
+        """
         prep = self.registry.get(key)
         fused, sizes = coalesce(batches)
         self._check_query(prep, fused)
+        self._check_deadline(key, deadline_s, phase="dispatch")
         with obs.span("serve.request", key=key, rows=int(fused.shape[0]),
                       requests=len(sizes)):
             t0 = time.perf_counter()
             dens = jax.block_until_ready(fault_injection.poison(
                 "serve.result", self._dispatch(prep, fused, precision)))
             dt = time.perf_counter() - t0
+        self._check_deadline(key, deadline_s, phase="answer")
         self._note_served(dt, fused.shape[0], len(sizes))
         return split(dens, sizes)
 
@@ -149,6 +167,23 @@ class ServeEngine:
             raise BadRequest(
                 f"query shape {tuple(y.shape)} does not match estimator "
                 f"{prep.key!r} (expected (m, {prep.d}) with m >= 1)"
+            )
+
+    @staticmethod
+    def _check_deadline(key: str, deadline_s: Optional[float],
+                        phase: str) -> None:
+        if deadline_s is None:
+            return
+        late = time.monotonic() - deadline_s
+        if late >= 0:
+            obs.counter("serve.deadline_exceeded",
+                        "requests past their deadline at the plain engine",
+                        labels={"phase": phase}).inc()
+            raise DeadlineExceeded(
+                f"request for {key!r} missed its deadline by "
+                f"{1e3 * late:.1f}ms "
+                + ("before dispatch" if phase == "dispatch"
+                   else "(answer completed late)")
             )
 
     def _note_served(self, seconds: float, rows: int, requests: int) -> None:

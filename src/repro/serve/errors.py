@@ -34,7 +34,18 @@ class DeadlineExceeded(ServeError, TimeoutError):
 
 
 class Overloaded(ServeError):
-    """The service shed the request: no live replica could take it."""
+    """The service shed the request instead of queueing it unboundedly.
+
+    Raised by the resilient layer when no live replica can take a
+    dispatch, and by the admission front end at admit time (queue full,
+    token bucket empty, shedding, or draining) — ``reason`` carries the
+    machine-readable shed cause so clients and the overload soak can
+    split typed rejections by policy without parsing prose.
+    """
+
+    def __init__(self, msg: str, *, reason: str = "overload"):
+        super().__init__(msg)
+        self.reason = reason
 
 
 class Degraded(ServeError):

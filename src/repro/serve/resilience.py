@@ -263,7 +263,7 @@ class ResilientEngine:
         self.stats: Dict[str, int] = {
             k: 0 for k in ("requests", "dropped", "degraded", "shed",
                            "retries", "hedges", "hedge_wins", "probes",
-                           "readmits", "fenced")
+                           "readmits", "fenced", "last_resort")
         }
         self.service_plan: Optional[elastic.MeshPlan] = None
         self._lock = threading.Lock()
@@ -473,6 +473,21 @@ class ResilientEngine:
                 return None
             cands = self._candidates(table, s, bucket, attempt)
             if not cands:
+                # every replica is fenced (or breaker-open).  Fencing is a
+                # health *inference* from missed heartbeats — a stalled
+                # supervisor clock fences replicas that are perfectly
+                # alive — and a degraded answer is strictly worse than an
+                # exact one, so probe the fenced replicas as a last
+                # resort before giving the shard up for missing.
+                cands = self._candidates(table, s, bucket, attempt,
+                                         include_fenced=True)
+                if cands:
+                    self.stats["last_resort"] += 1
+                    obs.counter(
+                        "resilience.last_resort",
+                        "dispatches to fenced replicas after every live "
+                        "candidate was exhausted").inc()
+            if not cands:
                 return None
             dens = self._race(table, s, cands, y, deadline, tier, counters)
             if dens is not None:
@@ -489,8 +504,14 @@ class ResilientEngine:
         return None
 
     def _candidates(self, table: _ShardTable, s: int, bucket: int,
-                    attempt: int) -> List[int]:
-        """Live, breaker-admitted replicas of shard ``s``, primary first."""
+                    attempt: int, *,
+                    include_fenced: bool = False) -> List[int]:
+        """Live, breaker-admitted replicas of shard ``s``, primary first.
+
+        With ``include_fenced`` the fenced replicas are offered too
+        (still breaker-gated) — the last-resort pass when the shard has
+        no live candidate at all.
+        """
         R = table.n_replicas
         sup = self.supervisor
         # rotate the primary per REQUEST, not per call: a per-call counter
@@ -501,7 +522,7 @@ class ResilientEngine:
         out = []
         for r in order:
             host = sup.hosts[s * R + r]
-            if host.fenced:
+            if host.fenced and not include_fenced:
                 continue
             if self._breaker(table.key, s, r, bucket).allow():
                 out.append(r)

