@@ -31,7 +31,8 @@ from benchmarks import common
 from repro.core import kde as ref
 from repro.core.mixtures import mixture_for_dim
 from repro.fault_injection import ChaosConfig, ChaosEvent
-from repro.serve import ResilienceConfig, ResilientEngine, ServeConfig
+from repro.serve import (QueryRequest, ResilienceConfig, ResilientEngine,
+                         ServeConfig)
 
 #: Acceptance bars (ISSUE 8): zero drops, bounded tail under chaos.
 P99_RATIO_MAX = 5.0
@@ -84,7 +85,8 @@ def run_soak(
     # warm every bucket the traffic will hit, so the soak measures
     # dispatch policy, not first-compile storms
     for b in cfg.bucket_sizes():
-        eng.query("soak", pool[:b], deadline_ms=120_000)
+        eng.query(QueryRequest(key="soak", points=pool[:b],
+                               deadline_s=120.0))
     eng.latency.reset()
 
     lat = {"steady": [], "chaos": [], "recovery": []}
@@ -93,7 +95,8 @@ def run_soak(
         phase = ("steady" if i < kill_lo else
                  "chaos" if i < kill_hi else "recovery")
         off = int(rng.integers(0, pool.shape[0] - m))
-        ans = eng.query("soak", pool[off:off + m])
+        ans = eng.query(QueryRequest(key="soak",
+                                     points=pool[off:off + m]))
         lat[phase].append(ans.latency_s)
         if pace_s:
             time.sleep(pace_s)   # sustained traffic, not a tight loop
@@ -171,7 +174,7 @@ def run_degraded(
     for _ in range(requests):
         off = int(rng.integers(0, pool.shape[0] - query_rows))
         y = pool[off:off + query_rows]
-        ans = eng.query("degraded", y)
+        ans = eng.query(QueryRequest(key="degraded", points=y))
         assert ans.degraded and ans.missing_shards == (1,)
         oracle = np.asarray(
             ref.sdkde_eval(x, y, table.h, block=1024), np.float64)

@@ -143,8 +143,9 @@ def _plan_id_of(pinned: dict) -> str:
     pr = pr if isinstance(pr, str) else f"{pr:g}"
     blocks = ("-" if pinned.get("block_m") is None
               else f"{pinned.get('block_m')}x{pinned.get('block_n')}")
-    return (f"{pinned.get('backend')}/{pinned.get('precision')}"
+    base = (f"{pinned.get('backend')}/{pinned.get('precision')}"
             f"/prune={pr}/{blocks}")
+    return f"rff+{base}" if pinned.get("rff") else base
 
 
 def main(argv=None) -> int:

@@ -25,7 +25,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro import obs
 from repro.core.mixtures import mixture_for_dim
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 
 
 def main(n: int = 2048, d: int = 4, n_requests: int = 24,
@@ -42,13 +42,13 @@ def main(n: int = 2048, d: int = 4, n_requests: int = 24,
     eng = ServeEngine(ServeConfig(backend="jnp"))
     eng.register("obs", x)
     for m, off in zip(sizes, offs):       # warm every bucket before timing
-        eng.query("obs", pool[off:off + m])
+        eng.query(QueryRequest(key="obs", points=pool[off:off + m]))
 
     def pass_lats() -> list:
         lats = []
         for m, off in zip(sizes, offs):
             t0 = time.perf_counter()
-            eng.query("obs", pool[off:off + m])
+            eng.query(QueryRequest(key="obs", points=pool[off:off + m]))
             lats.append(time.perf_counter() - t0)
         return lats
 

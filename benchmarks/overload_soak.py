@@ -81,6 +81,7 @@ import numpy as np
 from benchmarks import common
 from repro.core.mixtures import mixture_for_dim
 from repro.serve import (AsyncFrontend, DeadlineExceeded, FrontendConfig,
+                         QueryRequest,
                          Overloaded, ServeConfig, ServeEngine)
 
 #: Goodput through burst + recovery, as a fraction of steady goodput.
@@ -127,8 +128,9 @@ def run_overload(
     eng = ServeEngine(cfg)
     eng.register("soak", x)
     for b in cfg.bucket_sizes():          # warm: measure policy, not JIT
-        eng.query("soak", pool[:b])
-        eng.query("soak", pool[:b], precision="bf16")   # brownout tier
+        eng.query(QueryRequest(key="soak", points=pool[:b]))
+        eng.query(QueryRequest(key="soak", points=pool[:b],
+                               precision="bf16"))  # brownout tier
 
     # -- probe: OPEN-loop capacity + dispatch p99 -------------------------
     # Capacity must be measured the way the arc will load the system:
@@ -145,7 +147,8 @@ def run_overload(
         for _ in range(probe_requests):
             m = int(rng.integers(1, max_rows + 1))
             off = int(rng.integers(0, pool.shape[0] - m))
-            f = fe.submit("soak", pool[off:off + m])
+            f = fe.submit(QueryRequest(key="soak",
+                                       points=pool[off:off + m]))
             f.add_done_callback(
                 lambda f, ts=time.perf_counter():
                 lats.append(time.perf_counter() - ts))
@@ -209,8 +212,9 @@ def run_overload(
                 t += 1.0 / rate
                 i += 1
                 try:
-                    f = fe.submit("soak", pool[off:off + m],
-                                  deadline_s=deadline_s)
+                    f = fe.submit(QueryRequest(
+                        key="soak", points=pool[off:off + m],
+                        deadline_s=deadline_s))
                 except Overloaded:
                     counts[name]["shed"] += 1
                     continue

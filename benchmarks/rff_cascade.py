@@ -1,0 +1,249 @@
+"""RFF fast tier + accuracy cascade: mixed-traffic hit fraction, certified
+bands, and the modeled cascade-vs-all-exact speedup.
+
+Two modes, mirroring ``pruning_sweep``/``streaming_throughput``:
+
+  * **smoke** (CI): a small dataset served through the real engine with a
+    mixed accuracy-target traffic stream.  Asserts the cascade contract
+    end to end: a nonzero RFF-tier hit fraction, and the per-row
+    certified band dominating the realized error against a from-scratch
+    exact reference on every row (RFF-answered or escalated).
+  * **acceptance**: the 256k gated cell.  Mixed traffic (75% @1e-2,
+    15% @5e-2, 10% @1e-3 relative-accuracy targets) over a 262144-point
+    fit served through the engine; the gate requires ≥70% of the stream
+    to resolve at the RFF tier with realized error ≤1e-2, a modeled
+    cascade qps ≥5× the all-exact pass, and zero certificate violations.
+    The hit fractions are measured (seeded, deterministic); the speedup
+    is modeled — the same ``autotune.modeled_cost`` currency every other
+    gated cell prices in — because the CI CPU's wall clock can't see an
+    MXU-shaped win.
+
+    The emitted ``rff_cascade`` cell doubles as the planner's measured
+    evidence: ``plan.BenchModel.measured_rff_hit`` reads its
+    ``rff_hit_frac``/``accuracy_target`` fields, which is what licenses
+    an ``ExecutionPlan.rff=True`` decision for this regime (and derives
+    the pinned golden entry, like every other gated cell).
+
+    PYTHONPATH=src python -m benchmarks.rff_cascade
+    PYTHONPATH=src python -m benchmarks.rff_cascade --acceptance
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import bandwidth as bw
+from repro.core import kde as ref
+from repro.core.mixtures import mixture_for_dim
+from repro.kernels import autotune, flash_rff
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
+
+#: The acceptance traffic mix: (relative accuracy target, share of rows).
+TRAFFIC = ((1e-2, 0.75), (5e-2, 0.15), (1e-3, 0.10))
+
+#: Certificate slack: covers f64-vs-f32 reference dust, nothing else.
+CERT_SLACK = 1e-6
+
+
+def _run_traffic(eng, key: str, y: np.ndarray, mix=TRAFFIC,
+                 batch: int = 4096):
+    """Dispatch ``y`` through the engine as a mixed-target stream.
+
+    Returns per-row arrays (value, certified bound, target) plus the
+    engine-reported (hits, escalated) totals.  Rows are sliced into the
+    traffic buckets in order — the sample is iid, so slicing IS a random
+    assignment.
+    """
+    rows = y.shape[0]
+    counts = [int(rows * frac) for _, frac in mix]
+    counts[0] += rows - sum(counts)          # remainder to the head bucket
+    value = np.empty(rows, np.float64)
+    bounds = np.empty(rows, np.float64)
+    targets = np.empty(rows, np.float64)
+    hits = escalated = 0
+    lo = 0
+    for (target, _), cnt in zip(mix, counts):
+        for start in range(lo, lo + cnt, batch):
+            stop = min(start + batch, lo + cnt)
+            ans = eng.query(QueryRequest(key=key, points=y[start:stop],
+                                         accuracy_target=target))
+            value[start:stop] = np.asarray(ans.value, np.float64)
+            b = (np.asarray(ans.rel_err_bounds, np.float64)
+                 if ans.rel_err_bounds is not None
+                 else np.full(stop - start, ans.rel_err_bound))
+            bounds[start:stop] = b
+            targets[start:stop] = target
+            hits += ans.rff_hits
+            escalated += ans.escalated
+        lo += cnt
+    return value, bounds, targets, hits, escalated
+
+
+def smoke(
+    n: int = 8192,
+    d: int = 2,
+    rows: int = 1024,
+    n_features: int = 4096,
+    seed: int = 0,
+) -> None:
+    """Serve-level cascade smoke: real engine, certificate verified."""
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = np.asarray(mix.sample(key, n), np.float32)
+    y = np.asarray(mix.sample(jax.random.fold_in(key, 7), rows), np.float32)
+    h = float(bw.silverman_bandwidth(x))
+
+    cfg = ServeConfig(backend="jnp", method="kde", rff="on",
+                      rff_features=n_features, min_batch=128,
+                      max_batch=1024)
+    eng = ServeEngine(cfg)
+    t0 = time.perf_counter()
+    eng.register("cascade", x, h=h)
+    fit_s = time.perf_counter() - t0
+
+    value, bounds, targets, hits, escalated = _run_traffic(
+        eng, "cascade", y, batch=1024)
+    want = np.asarray(ref.kde_eval(x, y, h, block=4096), np.float64)
+    state = eng.registry.get("cascade").rff.state
+    realized = flash_rff.realized_error(value, want, state.p_scale)
+    worst = float((realized - bounds).max())
+    if worst > CERT_SLACK:
+        raise RuntimeError(
+            f"certified band violated by {worst:.2e} in the cascade smoke")
+    if hits == 0:
+        raise RuntimeError("cascade smoke answered zero rows at the RFF "
+                           "tier — the fast tier never engaged")
+    emit("rff_cascade_smoke", n=n, d=d, rows=rows,
+         rff_features=n_features, h=round(h, 4), fit_s=round(fit_s, 2),
+         rff_hits=hits, escalated=escalated,
+         rff_frac=round(hits / rows, 3),
+         worst_cert_slack=f"{worst:.2e}",
+         max_realized_err=f"{float(realized.max()):.2e}")
+
+
+def acceptance(
+    n: int = 262144,
+    d: int = 2,
+    rows: int = 8192,
+    batch: int = 4096,
+    n_features: int = 8192,
+    n_pilot: int = 2048,
+    groups: int = 32,
+    target_frac: float = 0.70,
+    target_speedup: float = 5.0,
+    seed: int = 0,
+) -> None:
+    """The 256k mixed-traffic gated cell (≥70% RFF @ ≤1e-2, ≥5× modeled)."""
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = np.asarray(mix.sample(key, n), np.float32)
+    y = np.asarray(mix.sample(jax.random.fold_in(key, 7), rows), np.float32)
+    h = float(bw.silverman_bandwidth(x))
+
+    cfg = ServeConfig(backend="jnp", method="kde", rff="on",
+                      rff_features=n_features, rff_pilot=n_pilot,
+                      rff_groups=groups, min_batch=512, max_batch=batch)
+    eng = ServeEngine(cfg)
+    t0 = time.perf_counter()
+    eng.register("traffic", x, h=h)
+    fit_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    value, bounds, targets, hits, escalated = _run_traffic(
+        eng, "traffic", y, batch=batch)
+    serve_s = time.perf_counter() - t0
+
+    # certificate: realized error never exceeds the per-row bound —
+    # RFF-answered rows carry the band, escalated rows the exact tier's
+    # documented rtol
+    want = np.asarray(ref.kde_eval(x, y, h, block=4096), np.float64)
+    state = eng.registry.get("traffic").rff.state
+    realized = flash_rff.realized_error(value, want, state.p_scale)
+    worst = float((realized - bounds).max())
+
+    # per-row routing mask: recompute the band the engine routed on (same
+    # deterministic state) and cross-check against the engine's counters
+    p_rff, band = flash_rff.eval_density(state.serving(), y)
+    band = np.asarray(band, np.float64)
+    hit_mask = band <= targets
+    if int(hit_mask.sum()) != hits:
+        raise RuntimeError(
+            f"routing mask disagrees with engine counters: "
+            f"{int(hit_mask.sum())} vs {hits}")
+
+    frac_rff = hits / rows
+    # the headline gate: resolved at the RFF tier AND realized ≤ 1e-2,
+    # as a fraction of the whole mixed stream
+    frac_ok = float((hit_mask & (realized <= 1e-2)).mean())
+    # the planner's evidence: hit fraction of the 1e-2-target bucket
+    at_1e2 = targets == 1e-2
+    hit_1e2 = float(hit_mask[at_1e2].mean())
+
+    # modeled qps: all-exact pass vs expected cascade cost per batch
+    exact_us = 1e6 * autotune.modeled_cost(
+        batch, n, d, block_m=128, block_n=512, precision="f32").step_time
+    rff_us = flash_rff.modeled_query_cost_us(
+        batch, d, n_features=n_features, n_pilot=n_pilot)
+    cascade_us = rff_us + (1.0 - frac_rff) * exact_us
+    speedup = exact_us / cascade_us
+
+    emit("rff_cascade", n=n, d=d, batch=batch, backend="jnp",
+         accuracy_target=1e-2, rff_hit_frac=round(hit_1e2, 4),
+         rff_features=n_features, rff_pilot=n_pilot, rff_groups=groups,
+         # the Silverman bandwidth is runtime-derived, so it must stay
+         # out of the gate's cell identity (check_regression ID_FIELDS
+         # includes "h") — a baseline pin can't depend on a computed float
+         silverman_h=round(h, 4), rows=rows,
+         traffic="/".join(f"{t:g}@{f:g}" for t, f in TRAFFIC),
+         mixed_rff_frac=round(frac_rff, 4),
+         resolved_ok_frac=round(frac_ok, 4),
+         escalated=escalated,
+         worst_cert_slack=f"{worst:.2e}",
+         fit_s=round(fit_s, 1), serve_s=round(serve_s, 1),
+         exact_model_us=round(exact_us, 1),
+         rff_model_us=round(rff_us, 1),
+         cascade_model_us=round(cascade_us, 1),
+         modeled_speedup=round(speedup, 2),
+         target_speedup=target_speedup,
+         meets_target=bool(speedup >= target_speedup
+                           and frac_ok >= target_frac
+                           and worst <= CERT_SLACK))
+    if worst > CERT_SLACK:
+        raise RuntimeError(
+            f"certified band violated by {worst:.2e} at acceptance scale")
+    if frac_ok < target_frac:
+        raise RuntimeError(
+            f"only {frac_ok:.0%} of mixed traffic resolved at the RFF tier "
+            f"with error ≤1e-2 (target {target_frac:.0%})")
+    if speedup < target_speedup:
+        raise RuntimeError(
+            f"modeled cascade speedup {speedup:.1f}x below the "
+            f"{target_speedup}x target")
+
+
+def main(
+    smoke_n: int = 8192,
+    smoke_d: int = 2,
+    run_acceptance: bool = False,
+    seed: int = 0,
+) -> None:
+    smoke(n=smoke_n, d=smoke_d, seed=seed)
+    if run_acceptance:
+        acceptance(seed=seed)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--acceptance", action="store_true",
+                    help="run the 256k mixed-traffic gated cell")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke_n=args.n, smoke_d=args.d, run_acceptance=args.acceptance,
+         seed=args.seed)

@@ -32,6 +32,7 @@ from benchmarks import (
     planner_cells,
     precision_sweep,
     pruning_sweep,
+    rff_cascade,
     serve_throughput,
     streaming_throughput,
     table1_methods,
@@ -91,6 +92,11 @@ def main() -> None:
          "(repro.stream)",
          streaming_throughput.main, smoke_n=2048, smoke_d=8,
          run_acceptance=True)
+    _run("rff_cascade", "RFF fast tier + accuracy cascade: mixed-traffic "
+         "hit fraction, certified bands, and the 256k modeled "
+         "cascade-vs-exact acceptance cell (kernels/flash_rff.py, "
+         "serve/cascade.py)",
+         rff_cascade.main, smoke_n=8192, smoke_d=2, run_acceptance=True)
     _run("planner", "execution-planner decisions per committed gated cell: "
          "plan cost vs the default serve path + golden-fixture cross-check "
          "(repro.plan, benchmarks/planner_cells.py)",

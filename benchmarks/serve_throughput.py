@@ -21,7 +21,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import kde as ref
 from repro.core.mixtures import mixture_for_dim
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 
 
 def main(
@@ -60,7 +60,8 @@ def main(
 
         if verify:
             yv = y_all[: max(batch_sizes)]
-            got = np.asarray(eng.query("bench", yv))
+            got = np.asarray(
+                eng.query(QueryRequest(key="bench", points=yv)).value)
             ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
                       "laplace": ref.laplace_kde_eval}[method]
             want = np.asarray(ref_fn(x, yv, h, block=1024))
@@ -81,11 +82,12 @@ def main(
         rng = np.random.default_rng(seed)
         for b in batch_sizes:
             for _ in range(2):  # warm the shape bucket (compile outside timing)
-                eng.query("bench", y_all[:b])
+                eng.query(QueryRequest(key="bench", points=y_all[:b]))
             eng.latency.reset()
             for _ in range(n_requests):
                 off = int(rng.integers(0, y_all.shape[0] - b + 1))
-                eng.query("bench", y_all[off:off + b])
+                eng.query(QueryRequest(key="bench",
+                                       points=y_all[off:off + b]))
             s = eng.latency.summary()
             emit("serve", backend=backend, method=method, n=n, d=d, batch=b,
                  precision=precision,

@@ -30,7 +30,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import kde as ref
 from repro.core.mixtures import mixture_for_dim
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 from repro.stream import StreamConfig, StreamingSDKDE, delta
 
 
@@ -59,7 +59,7 @@ def smoke(
     t0 = time.perf_counter()
     eng.register("stream", x, h=h)
     fit_s = time.perf_counter() - t0
-    eng.query("stream", y)                      # warm the bucket
+    eng.query(QueryRequest(key="stream", points=y))   # warm the bucket
 
     append_s, appended = 0.0, 0
     for i in range(updates):
@@ -70,7 +70,7 @@ def smoke(
         eng.registry.slide("stream", fresh)     # append batch + evict oldest
         append_s += time.perf_counter() - t0
         appended += batch
-        eng.query("stream", y)
+        eng.query(QueryRequest(key="stream", points=y))
     st = eng.registry.get("stream").stream
     stale = eng.staleness_summary()
     emit("streaming_smoke", n=n, d=d, batch=batch, updates=updates,
@@ -84,7 +84,8 @@ def smoke(
         # flush before comparing: the engine may legally serve up to
         # staleness_budget generations behind the live reference set
         st.ensure(0)
-        got = np.asarray(eng.query("stream", y))
+        got = np.asarray(
+            eng.query(QueryRequest(key="stream", points=y)).value)
         want = np.asarray(ref.sdkde_eval(st.x, y, h, block=1024))
         np.testing.assert_allclose(got, want, rtol=1e-5,
                                    atol=1e-6 * float(want.max()))

@@ -6,7 +6,7 @@
 import jax
 
 from repro.core.mixtures import mixture_for_dim
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 
 
 def main():
@@ -25,11 +25,14 @@ def main():
     # Ragged single requests: padded to shape buckets, no recompile storms.
     pool = mix.sample(jax.random.fold_in(key, 2), 512)
     for m in (3, 40, 170, 40, 3):
-        dens = eng.query("tenant-a", pool[:m])
+        dens = eng.query(QueryRequest(key="tenant-a",
+                                      points=pool[:m])).value
         print(f"query m={m:4d} -> bucket exec, density[0]={float(dens[0]):.3e}")
 
     # Micro-batching: coalesce concurrent requests into ONE dispatch.
-    outs = eng.query_many("tenant-b", [pool[:5], pool[5:90], pool[90:101]])
+    outs = [a.value for a in eng.query_many(
+        [QueryRequest(key="tenant-b", points=q)
+         for q in (pool[:5], pool[5:90], pool[90:101])])]
     print(f"coalesced 3 requests -> shapes {[tuple(o.shape) for o in outs]}")
 
     s = eng.latency.summary()

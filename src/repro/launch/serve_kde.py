@@ -21,7 +21,7 @@ import numpy as np
 from repro import obs
 from repro.core import kde as ref
 from repro.core.mixtures import mixture_for_dim
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 
 
 def main():
@@ -47,8 +47,16 @@ def main():
     ap.add_argument("--block-n", type=block_arg, default=None,
                     help="Pallas column tile (int or 'auto')")
     ap.add_argument("--precision", default=None,
-                    choices=["f32", "bf16", "bf16x2"],
-                    help="Pallas GEMM-operand tier (kernels/precision.py)")
+                    choices=["f32", "bf16", "bf16x2", "rff"],
+                    help="Pallas GEMM-operand tier (kernels/precision.py) "
+                         "or 'rff' to pin the random-feature fast tier")
+    ap.add_argument("--rff", default=None, choices=["auto", "on", "off"],
+                    help="random-feature fast tier policy "
+                         "(kernels/flash_rff.py; 'auto' fits lazily on "
+                         "first cascade-eligible query)")
+    ap.add_argument("--rff-features", type=int, default=None,
+                    help="random Fourier features D (cos+sin pairs; "
+                         "default 8192)")
     prune_arg = lambda s: s if s in ("auto", "off") else float(s)  # noqa: E731
     ap.add_argument("--prune", type=prune_arg, default=None,
                     help="cluster pruning: 'auto' (exact, epsilon=0, on for "
@@ -59,8 +67,10 @@ def main():
                     help="'auto' resolves unset knobs through the "
                          "repro.plan cost-model planner at fit time")
     ap.add_argument("--accuracy-target", type=float, default=None,
-                    help="planner relative-accuracy budget "
-                         "(default f32-grade, 1e-5)")
+                    help="certified relative-error budget: the planner's "
+                         "accuracy request AND the per-query accuracy-"
+                         "cascade gate (queries whose RFF band fits are "
+                         "answered at the fast tier, the rest escalate)")
     ap.add_argument("--plan-json", metavar="PATH", default=None,
                     help="write the resolved execution plan (request, "
                          "decision, resolved knobs) to PATH")
@@ -146,6 +156,10 @@ def main():
             knobs[name] = v
     if isinstance(knobs.get("block_n"), int):
         knobs["block_n"] = min(knobs["block_n"], args.n)
+    for name in ("rff", "rff_features"):
+        v = getattr(args, name)
+        if v is not None:
+            knobs[name] = v
     cfg = ServeConfig(
         method=args.method, interpret=True,
         min_batch=args.min_batch, max_batch=args.max_batch,
@@ -218,9 +232,11 @@ def main():
                                args.requests)).astype(int).clip(1)
     update_every = (max(1, args.requests // max(args.updates, 1))
                     if args.stream else 0)
-    eng.query("traffic", pool[: args.max_batch])  # warm the largest bucket
+    # warm the largest bucket
+    eng.query(QueryRequest(key="traffic", points=pool[: args.max_batch]))
     eng.latency.reset()
     append_s, n_updates = 0.0, 0
+    rff_hits = escalated = 0
     t0 = time.perf_counter()
     for i, m in enumerate(sizes):
         if update_every and i % update_every == 0:
@@ -233,7 +249,10 @@ def main():
             append_s += time.perf_counter() - ta
             n_updates += 1
         off = int(rng.integers(0, pool.shape[0] - m))
-        eng.query("traffic", pool[off:off + m])
+        ans = eng.query(QueryRequest(key="traffic",
+                                     points=pool[off:off + m]))
+        rff_hits += ans.rff_hits
+        escalated += ans.escalated
     wall = time.perf_counter() - t0
 
     s = eng.latency.summary()
@@ -243,6 +262,11 @@ def main():
     print(f"bucket cache: {eng.cache.hits} hits / {eng.cache.misses} misses "
           f"/ {eng.cache.evictions} evictions "
           f"({len(eng.cache)} resident executables)")
+    if rff_hits or escalated:
+        total = rff_hits + escalated
+        print(f"cascade: {rff_hits}/{total} query rows answered at the "
+              f"RFF tier ({rff_hits / total:.0%}), {escalated} escalated "
+              f"to {rcfg.exact_precision}")
     if args.stream and n_updates:
         st = eng.registry.get("traffic").stream
         stale = eng.staleness_summary()
@@ -257,13 +281,16 @@ def main():
                  if st.rebuilds else ""))
 
     if args.verify:
+        import sys
+
         yv = pool[:256]
         if args.stream:
             # the engine may legally serve up to staleness_budget
             # generations behind live; force a flush so the verify query
             # and the live-set reference see the same generation
             eng.registry.get("traffic").stream.ensure(0)
-        got = np.asarray(eng.query("traffic", yv))
+        vans = eng.query(QueryRequest(key="traffic", points=yv))
+        got = np.asarray(vans.value)
         ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
                   "laplace": ref.laplace_kde_eval}[args.method]
         # stream mode: the reference is the *current* live set, not the
@@ -271,16 +298,45 @@ def main():
         x_ref = (eng.registry.get("traffic").stream.x
                  if args.stream else x)
         want = np.asarray(ref_fn(x_ref, yv, prep.h, block=1024))
-        # the f32 reference path; reduced tiers verify at their documented
-        # accuracy bars (rtol + peak-relative atol for deep-tail densities,
-        # see kernels/precision.py)
-        rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[rcfg.precision]
-        atol_frac = {"f32": 1e-6, "bf16": 5e-3,
-                     "bf16x2": 1e-5}[rcfg.precision]
-        np.testing.assert_allclose(
-            got, want, rtol=rtol,
-            atol=atol_frac * float(np.max(np.abs(want))))
-        print(f"verify: serve path matches jnp reference (rtol {rtol:g})")
+        cascaded = vans.rff_hits or rff_hits
+        if cascaded:
+            # cascade verification: the certified per-row bound must
+            # dominate the realized error (flash_rff's tail-floored
+            # relative metric), and the fast tier must actually answer
+            from repro.kernels import flash_rff
+
+            state = eng.registry.get("traffic").rff.state
+            realized = flash_rff.realized_error(got, want, state.p_scale)
+            bounds = np.asarray(vans.rel_err_bounds, np.float64)
+            worst = float((realized - bounds).max())
+            if worst > 1e-6:
+                print(f"FAIL: realized error exceeds the certified band "
+                      f"by {worst:.2e}", file=sys.stderr)
+                sys.exit(1)
+            hits = rff_hits + vans.rff_hits
+            total = (rff_hits + escalated + vans.rff_hits
+                     + vans.escalated)
+            if hits == 0:
+                print("FAIL: accuracy cascade engaged but zero rows "
+                      "resolved at the RFF tier (loosen "
+                      "--accuracy-target or raise --rff-features)",
+                      file=sys.stderr)
+                sys.exit(1)
+            print(f"verify: certified bands dominate realized error "
+                  f"(worst slack {-worst:.1e}); {hits}/{total} rows "
+                  f"({hits / total:.0%}) answered at the RFF tier")
+        else:
+            # the f32 reference path; reduced tiers verify at their
+            # documented accuracy bars (rtol + peak-relative atol for
+            # deep-tail densities, see kernels/precision.py)
+            tier = rcfg.exact_precision
+            rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[tier]
+            atol_frac = {"f32": 1e-6, "bf16": 5e-3, "bf16x2": 1e-5}[tier]
+            np.testing.assert_allclose(
+                got, want, rtol=rtol,
+                atol=atol_frac * float(np.max(np.abs(want))))
+            print(f"verify: serve path matches jnp reference "
+                  f"(rtol {rtol:g})")
 
     if args.metrics_json:
         import json
@@ -340,10 +396,8 @@ def _run_open_loop(args, cfg, x, pool) -> None:
     rng = np.random.default_rng(args.seed)
     # warm the buckets the traffic will hit, then probe capacity with a
     # saturated all-at-once window if --qps was not pinned
-    eng_q = (lambda y: eng.query("traffic", y).densities) if resilient \
-        else (lambda y: eng.query("traffic", y))
     for b in cfg.bucket_sizes():
-        eng_q(pool[:b])
+        eng.query(QueryRequest(key="traffic", points=pool[:b]))
     qps = args.qps
     if qps <= 0:
         probe = AsyncFrontend(eng, FrontendConfig(
@@ -353,7 +407,8 @@ def _run_open_loop(args, cfg, x, pool) -> None:
         for _ in range(64):
             m = int(rng.integers(1, max(2, args.max_batch // 8)))
             off = int(rng.integers(0, pool.shape[0] - m))
-            fs.append(probe.submit("traffic", pool[off:off + m]))
+            fs.append(probe.submit(
+                QueryRequest(key="traffic", points=pool[off:off + m])))
         probe.drain(timeout=60.0)
         probe.close()
         qps = 0.5 * 64 / (time.perf_counter() - t0)
@@ -384,7 +439,8 @@ def _run_open_loop(args, cfg, x, pool) -> None:
         m = int(rng.integers(1, max(2, args.max_batch // 8)))
         off = int(rng.integers(0, pool.shape[0] - m))
         try:
-            futs.append(fe.submit("traffic", pool[off:off + m]))
+            futs.append(fe.submit(
+                QueryRequest(key="traffic", points=pool[off:off + m])))
         except Overloaded:
             shed += 1
     fe.drain(timeout=60.0)
@@ -491,13 +547,15 @@ def _run_resilient(args, cfg, x, pool) -> None:
     rng = np.random.default_rng(args.seed)
     sizes = np.exp(rng.uniform(np.log(1), np.log(args.max_batch),
                                args.requests)).astype(int).clip(1)
-    degraded = errors = 0
+    degraded = errors = rff_hits = 0
     t0 = time.perf_counter()
     for m in sizes:
         off = int(rng.integers(0, pool.shape[0] - m))
         try:
-            ans = eng.query("traffic", pool[off:off + m])
+            ans = eng.query(QueryRequest(key="traffic",
+                                         points=pool[off:off + m]))
             degraded += int(ans.degraded)
+            rff_hits += ans.rff_hits
         except ServeError as e:
             errors += 1
             print(f"  shed: {type(e).__name__}: {e}")
@@ -512,7 +570,8 @@ def _run_resilient(args, cfg, x, pool) -> None:
           f"(won {st['hedge_wins']}) fenced={st['fenced']} "
           f"probes={st['probes']} readmits={st['readmits']} "
           f"degraded={degraded} shed={st['shed']} "
-          f"dropped={st['dropped']}")
+          f"dropped={st['dropped']}"
+          + (f" rff_rows={rff_hits}" if rff_hits else ""))
     open_brk = [k for k, v in eng.breaker_states().items() if v != "closed"]
     if open_brk:
         print(f"breakers not closed: {open_brk}")
@@ -524,14 +583,16 @@ def _run_resilient(args, cfg, x, pool) -> None:
         # answer must match the full-data reference exactly — and must NOT
         # be degraded, so disallow uncertified fallbacks here
         yv = pool[:256]
-        ans = eng.query("traffic", yv, allow_degraded=False,
-                        deadline_ms=60_000)
+        ans = eng.query(QueryRequest(key="traffic", points=yv,
+                                     allow_degraded=False,
+                                     deadline_s=60.0))
         ref_fn = {"kde": ref.kde_eval, "sdkde": ref.sdkde_eval,
                   "laplace": ref.laplace_kde_eval}[args.method]
         want = np.asarray(ref_fn(x, yv, table.h, block=1024))
-        rtol = {"f32": 1e-5, "bf16": 5e-2, "bf16x2": 5e-4}[cfg.precision]
+        rtol = {"f32": 1e-5, "bf16": 5e-2,
+                "bf16x2": 5e-4}[cfg.exact_precision]
         np.testing.assert_allclose(
-            np.asarray(ans.densities), want, rtol=rtol,
+            np.asarray(ans.value), want, rtol=rtol,
             atol=1e-6 * float(np.max(np.abs(want))))
         print(f"verify: resilient path matches full-data jnp reference "
               f"(rtol {rtol:g})")

@@ -73,7 +73,18 @@ def request_for_cell(cell: dict) -> Optional[PlanRequest]:
         q = DEFAULT_Q
 
     accuracy = DEFAULT_ACCURACY
-    if "epsilon" in cell:
+    rff = False
+    if name == "rff_cascade":
+        # the cascade cell carries its own accuracy target and is, by
+        # construction, cascade-eligible traffic
+        rff = True
+        try:
+            accuracy = float(cell.get("accuracy_target", DEFAULT_ACCURACY))
+        except (TypeError, ValueError):
+            accuracy = DEFAULT_ACCURACY
+        if not accuracy > 0.0:
+            accuracy = DEFAULT_ACCURACY
+    elif "epsilon" in cell:
         try:
             eps = float(cell["epsilon"])
         except (TypeError, ValueError):
@@ -91,13 +102,18 @@ def request_for_cell(cell: dict) -> Optional[PlanRequest]:
     backend = cell.get("backend")
     backend = backend if backend in _BACKENDS else "auto"
     return PlanRequest(n=n, d=d, q=q, accuracy=accuracy, backend=backend,
-                       stream=name.startswith("streaming"))
+                       stream=name.startswith("streaming"), rff=rff)
 
 
 def request_key(req: PlanRequest) -> str:
-    """Stable fixture key for one request."""
-    return (f"n={req.n} d={req.d} q={req.q} accuracy={req.accuracy:g} "
-            f"backend={req.backend} stream={req.stream}")
+    """Stable fixture key for one request.
+
+    The ``rff`` marker is appended only for cascade-eligible requests so
+    every pre-cascade fixture key stays byte-identical.
+    """
+    key = (f"n={req.n} d={req.d} q={req.q} accuracy={req.accuracy:g} "
+           f"backend={req.backend} stream={req.stream}")
+    return key + " rff=True" if req.rff else key
 
 
 def requests_from_docs(docs: Sequence[dict]) -> List[PlanRequest]:

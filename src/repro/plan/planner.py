@@ -111,12 +111,16 @@ class BenchModel:
 
     def __init__(self, docs: Sequence[dict] = ()):
         self._prune_cells: List[dict] = []
+        self._rff_cells: List[dict] = []
         for doc in docs:
             for cell in (doc or {}).get("cells", ()):
                 if not isinstance(cell, dict):
                     continue
                 if cell.get("cell") == "pruning" and "epsilon" in cell:
                     self._prune_cells.append(cell)
+                if cell.get("cell") == "rff_cascade" \
+                        and "rff_hit_frac" in cell:
+                    self._rff_cells.append(cell)
 
     @classmethod
     def load(cls, paths: Optional[Sequence[Union[str, Path]]] = None
@@ -178,6 +182,30 @@ class BenchModel:
                 return float(c["prune_rel_err"])
         return None
 
+    def measured_rff_hit(self, n: int, d: int,
+                         accuracy: float) -> Optional[float]:
+        """Measured RFF-tier hit fraction for this regime and target.
+
+        Only cells measured at an accuracy target at least as *tight* as
+        the request's are admissible (a looser target can only raise the
+        hit fraction, so the measurement is a safe lower bound); returns
+        the best such fraction, or None when the regime is unmeasured —
+        and an unmeasured regime never engages the fast tier in a plan,
+        mirroring the prune-epsilon rule.
+        """
+        nb = _bucket(n)
+        best = None
+        for c in self._rff_cells:
+            if _bucket(int(c.get("n", 0))) != nb \
+                    or int(c.get("d", -1)) != int(d):
+                continue
+            if float(c.get("accuracy_target", float("inf"))) > accuracy:
+                continue
+            frac = float(c["rff_hit_frac"])
+            if best is None or frac > best:
+                best = frac
+        return best
+
 
 def default_bench_paths() -> List[Path]:
     """The committed benchmark artifacts, repo-root-relative."""
@@ -202,6 +230,12 @@ class PlanRequest:
     accuracy: float = DEFAULT_ACCURACY   # target max relative error
     backend: str = "auto"           # "auto" | "jnp" | "pallas" | "ring"
     stream: bool = False
+    # Whether the workload is *eligible* for the RFF fast tier + accuracy
+    # cascade (serve/cascade.py): the estimator method supports it and the
+    # config hasn't disabled it.  Eligibility is not engagement — the
+    # planner still demands a measured ``rff_cascade`` cell and a modeled
+    # expected-cost win before a plan routes through the cascade.
+    rff: bool = False
 
     def __post_init__(self):
         if self.n < 1 or self.d < 1 or self.q < 1:
@@ -214,9 +248,12 @@ class PlanRequest:
             raise ValueError(f"bad backend {self.backend!r}")
 
     def as_dict(self) -> dict:
-        return {"n": self.n, "d": self.d, "q": self.q,
-                "accuracy": self.accuracy, "backend": self.backend,
-                "stream": self.stream}
+        out = {"n": self.n, "d": self.d, "q": self.q,
+               "accuracy": self.accuracy, "backend": self.backend,
+               "stream": self.stream}
+        if self.rff:                 # keep pre-cascade golden keys stable
+            out["rff"] = True
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,6 +279,14 @@ class ExecutionPlan:
     modeled_cost_s: float = 0.0
     bound: str = ""                 # which resource the model says saturates
     occupancy: float = 1.0          # expected visit fraction priced in
+    # Route through the RFF fast tier with cascade escalation to the exact
+    # plan above.  When True, ``precision``/``prune``/blocks describe the
+    # *escalation* tier and ``rff_hit_frac``/``modeled_rff_cost_s`` carry
+    # the measured hit fraction and modeled feature-GEMM cost the
+    # expected-cost decision was priced at.
+    rff: bool = False
+    rff_hit_frac: float = 0.0
+    modeled_rff_cost_s: float = 0.0
 
     @property
     def plan_id(self) -> str:
@@ -249,11 +294,12 @@ class ExecutionPlan:
         blocks = (f"{self.block_m}x{self.block_n}"
                   if self.block_m is not None else "-")
         pr = self.prune if isinstance(self.prune, str) else f"{self.prune:g}"
-        return f"{self.backend}/{self.precision}/prune={pr}/{blocks}"
+        base = f"{self.backend}/{self.precision}/prune={pr}/{blocks}"
+        return f"rff+{base}" if self.rff else base
 
     def as_dict(self) -> dict:
         """The golden-pinned decision record (JSON-stable field order)."""
-        return {
+        out = {
             "backend": self.backend,
             "precision": self.precision,
             "prune": self.prune,
@@ -265,6 +311,12 @@ class ExecutionPlan:
             "bound": self.bound,
             "occupancy": round(self.occupancy, 4),
         }
+        if self.rff:                 # keep pre-cascade golden plans stable
+            out["rff"] = True
+            out["rff_hit_frac"] = round(self.rff_hit_frac, 4)
+            out["modeled_rff_cost_us"] = round(
+                self.modeled_rff_cost_s * 1e6, 3)
+        return out
 
     # -- validity --------------------------------------------------------
 
@@ -323,6 +375,19 @@ class ExecutionPlan:
                     f"accuracy/{EPS_SAFETY:g} of the {req.accuracy:g} target")
         elif self.prune != "off":
             problems.append(f"bad prune {self.prune!r}")
+        if self.rff:
+            if not req.rff:
+                problems.append(
+                    "rff routing planned for a request that is not "
+                    "cascade-eligible")
+            if not (0.0 < self.rff_hit_frac <= 1.0):
+                problems.append(
+                    f"rff plan without a measured hit fraction "
+                    f"({self.rff_hit_frac})")
+            if not (self.modeled_rff_cost_s > 0.0):
+                problems.append(
+                    f"rff plan with non-positive modeled feature-GEMM "
+                    f"cost {self.modeled_rff_cost_s}")
         if self.staleness_budget < 0:
             problems.append("staleness_budget < 0")
         if not req.stream and self.staleness_budget != 0:
@@ -457,6 +522,22 @@ def plan(req: PlanRequest, bench: Optional[BenchModel] = None
                 occupancy = (occ_fn(best_cand.block_n)
                              if occ_fn is not None else 1.0)
 
+        # RFF fast tier: engage only when the request is cascade-eligible,
+        # a measured rff_cascade cell covers this (regime, accuracy), and
+        # the *expected* cascade cost — every row pays the feature GEMM,
+        # escalated rows additionally pay the exact pass — beats the
+        # all-exact pass.  That reduces to rff_cost < hit_frac · exact.
+        rff_on, rff_hit, rff_cost = False, 0.0, 0.0
+        if req.rff:
+            hit = bench.measured_rff_hit(req.n, req.d, req.accuracy)
+            if hit is not None and hit > 0.0:
+                from repro.kernels import flash_rff
+
+                rff_cost = flash_rff.modeled_query_cost_us(
+                    req.q, req.d) / 1e6
+                if rff_cost < hit * best_cand.step_time:
+                    rff_on, rff_hit = True, hit
+
         staleness, background = _staleness_policy(req)
         p = ExecutionPlan(
             request=req,
@@ -471,6 +552,9 @@ def plan(req: PlanRequest, bench: Optional[BenchModel] = None
             modeled_cost_s=best_cand.step_time,
             bound=best_cand.bound,
             occupancy=occupancy,
+            rff=rff_on,
+            rff_hit_frac=rff_hit,
+            modeled_rff_cost_s=rff_cost,
         ).check()
         sp.set(plan=p.plan_id, tier=p.precision,
                modeled_us=round(p.modeled_cost_s * 1e6, 2))
@@ -530,6 +614,8 @@ def resolve_config(cfg, n: int, d: int,
         accuracy=getattr(cfg, "accuracy_target", None) or DEFAULT_ACCURACY,
         backend=cfg.backend if "backend" in explicit else "auto",
         stream=bool(getattr(cfg, "stream", False)),
+        rff=(getattr(cfg, "rff", "off") != "off"
+             and getattr(cfg, "method", "sdkde") in ("kde", "sdkde")),
     )
     p = plan(req, bench=bench)
     updates = {}
@@ -545,6 +631,11 @@ def resolve_config(cfg, n: int, d: int,
         if p.block_m is not None:
             take("block_m", p.block_m)
             take("block_n", p.block_n)
+    if p.rff:
+        # the plan says the cascade pays for itself for this traffic —
+        # fit the RFF state eagerly with the debias pass instead of on
+        # the first cascade-routed request
+        take("rff", "on")
     if req.stream:
         take("staleness_budget", p.staleness_budget)
         take("stream_background", p.stream_background)

@@ -5,16 +5,26 @@ debias) once per dataset via the ``EstimatorRegistry``, then answer ragged
 query traffic through the ``ServeEngine``'s shape-bucketed micro-batcher on
 any of the three execution backends (``jnp`` / ``pallas`` / ``ring``).
 
-    from repro.serve import ServeConfig, ServeEngine
+The query surface is typed (``serve/api.py``): a ``QueryRequest`` carries
+points, an optional accuracy target, a relative deadline, and a precision
+pin; every engine returns an ``Answer`` with the densities, a certified
+per-row error bound, and the tier path the accuracy cascade took
+(``serve/cascade.py`` — the RFF fast tier answers what its band certifies,
+the pruned exact kernels take the rest).
+
+    from repro.serve import QueryRequest, ServeConfig, ServeEngine
 
     eng = ServeEngine(ServeConfig(backend="pallas", method="sdkde"))
     eng.register("my-dataset", x_train)          # O(n²·d) debias, once
-    dens = eng.query("my-dataset", y_queries)    # cheap GEMM per batch
-    print(eng.latency.summary())
+    ans = eng.query(QueryRequest(key="my-dataset", points=y_queries,
+                                 accuracy_target=1e-2))
+    print(ans.tier, ans.rel_err_bound, eng.latency.summary())
 """
 
+from repro.serve.api import Answer, QueryRequest, RFF_TIER
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
-from repro.serve.config import Backend, Method, ServeConfig
+from repro.serve.cascade import CascadeResult
+from repro.serve.config import Backend, Method, ServeConfig, ServeTier
 from repro.serve.engine import ServeEngine
 from repro.serve.errors import (BadRequest, DeadlineExceeded, Degraded,
                                 Overloaded, ServeError, UnknownKey)
@@ -27,7 +37,8 @@ from repro.serve.resilience import (ResilienceConfig, ResilientAnswer,
 from repro.serve.stats import LatencyRecorder, LatencySummary
 
 __all__ = [
-    "Backend", "Method", "ServeConfig",
+    "QueryRequest", "Answer", "RFF_TIER", "CascadeResult",
+    "Backend", "Method", "ServeConfig", "ServeTier",
     "EstimatorRegistry", "PreparedEstimator",
     "ServeEngine",
     "ResilienceConfig", "ResilientAnswer", "ResilientEngine",

@@ -1,0 +1,170 @@
+"""The typed query API: one request object, one answer object.
+
+Before this module, a per-request SLO was smeared across knob soup —
+``precision=`` here, ``deadline_s`` (absolute) on the plain engine,
+``deadline_ms`` (relative) on the resilient one, ``accuracy_target`` only
+at fit time, ``allow_degraded`` only on the resilient path.  The redesign
+makes every per-request intent one :class:`QueryRequest` and every
+outcome one :class:`Answer`, across ``ServeEngine.query``/``query_many``,
+``AsyncFrontend.submit`` and ``ResilientEngine.query`` (the legacy
+positional signatures survive one release as ``DeprecationWarning``
+shims that return their legacy types).
+
+**Precedence.**  The request object is the single authority for the
+serving tier::
+
+    request pin  >  explicit config  >  planner
+
+``ServeConfig`` resolution already folds "explicit config beats planner"
+at fit time (``plan/planner.resolve_config``), so the seam this module
+closes is the per-request one: a ``precision`` pin on the request always
+wins, and when it overrides a planner-chosen tier the engine counts it
+(``serve.pin_overrides_plan``) instead of silently diverging from the
+plan every dispatch span claims.
+
+``precision="rff"`` pins the random-feature fast tier
+(``kernels/flash_rff.py``); a request with an ``accuracy_target`` and no
+pin enters the accuracy cascade (``serve/cascade.py``): answered at the
+RFF tier when its certified band fits the target, escalated to the
+pruned exact kernel otherwise.  ``Answer.path`` records the tiers
+actually visited and ``Answer.rel_err_bounds`` the per-query certified
+bound, whichever route answered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.precision import PRECISIONS
+
+#: The pinnable serving tiers: the exact GEMM-operand tiers plus the
+#: random-feature fast tier.
+RFF_TIER = "rff"
+PINNABLE_TIERS = PRECISIONS + (RFF_TIER,)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """Everything one request asks for, in one hashable-free object.
+
+    ``deadline_s`` is *relative* seconds from submission — every layer
+    converts to its own clock internally (this is the one deadline
+    convention of the new API; the legacy shims keep their old ones).
+    ``accuracy_target`` is the certified relative-error budget that
+    drives cascade routing; ``None`` inherits the config's target (and
+    disables the cascade when that is unset too).  ``precision`` pins a
+    tier outright — exact tiers skip the cascade, ``"rff"`` forces the
+    fast tier, band reported as-is.
+    """
+
+    key: str
+    points: Any                              # (m, d) array-like
+    accuracy_target: Optional[float] = None
+    deadline_s: Optional[float] = None       # relative seconds
+    precision: Optional[str] = None          # pin; one of PINNABLE_TIERS
+    allow_degraded: Optional[bool] = None    # None = layer default
+
+    def __post_init__(self):
+        if not self.key:
+            raise ValueError("QueryRequest.key must be a non-empty string")
+        if self.precision is not None \
+                and self.precision not in PINNABLE_TIERS:
+            raise ValueError(
+                f"unknown precision pin {self.precision!r} "
+                f"(choose from {PINNABLE_TIERS})")
+        if self.accuracy_target is not None \
+                and not (self.accuracy_target > 0):
+            raise ValueError(
+                f"accuracy_target must be > 0, got {self.accuracy_target!r}")
+        if self.deadline_s is not None and not (self.deadline_s > 0):
+            raise ValueError(
+                f"deadline_s is relative seconds and must be > 0, got "
+                f"{self.deadline_s!r}")
+
+
+@dataclasses.dataclass
+class Answer:
+    """One answer, whatever layer produced it.
+
+    ``value`` is the density batch; ``tier`` the tier that answered the
+    final rows and ``path`` every tier visited in order (``("rff",)``,
+    ``("rff", "f32")``, ``("bf16",)``, ...).  ``rel_err_bound`` is the
+    max certified relative-error bound over the batch and
+    ``rel_err_bounds`` the per-query bounds (RFF band on fast-tier rows,
+    tier rtol + prune epsilon on exact rows, missing-shard certificate
+    on degraded rows).  The remaining fields carry each layer's
+    provenance: admission (``state``/``queued_ms``/``browned``),
+    resilience (``degraded``/shards/retries/hedges), streaming
+    (``staleness`` generations behind live) and planning (``plan_id``).
+
+    ``densities`` and ``precision`` are read-only compatibility views of
+    ``value`` and ``tier`` for callers migrating off the legacy answer
+    types (``FrontendAnswer``/``ResilientAnswer`` are aliases of this
+    class).
+    """
+
+    value: jnp.ndarray
+    key: str = ""
+    tier: str = "f32"
+    path: Tuple[str, ...] = ()
+    rel_err_bound: float = 0.0
+    rel_err_bounds: Optional[np.ndarray] = None
+    rff_hits: int = 0                 # rows answered at the RFF tier
+    escalated: int = 0                # rows escalated to an exact tier
+    degraded: bool = False
+    shed: bool = False
+    browned: bool = False
+    state: str = ""                   # admission state at dispatch
+    staleness: int = 0                # generations behind live (streaming)
+    plan_id: str = ""
+    queued_ms: float = 0.0
+    batch_requests: int = 1
+    live_shards: Tuple[int, ...] = ()
+    missing_shards: Tuple[int, ...] = ()
+    retries: int = 0
+    hedges: int = 0
+    hedge_wins: int = 0
+    latency_s: float = 0.0
+
+    @property
+    def densities(self) -> jnp.ndarray:
+        return self.value
+
+    @property
+    def precision(self) -> str:
+        return self.tier
+
+
+def resolve_tier(pin: Optional[str], cfg_precision: str,
+                 plan: object) -> Tuple[str, bool]:
+    """Apply the precedence rule for one request.
+
+    Returns ``(tier, pin_overrode_plan)``.  ``cfg_precision`` already
+    encodes "explicit config beats planner" (fit-time resolution), so
+    the only per-request decision left is the pin — and whether taking
+    it diverges from a planner-chosen tier (the event the engine counts).
+    """
+    if pin is None:
+        return cfg_precision, False
+    overrode = (plan is not None
+                and getattr(plan, "precision", None) is not None
+                and getattr(plan, "precision") != pin)
+    return pin, overrode
+
+
+def warn_legacy(legacy: str, replacement: str) -> None:
+    """The one-release deprecation shim warning (stacklevel: the caller
+    of the public serve API, not the shim internals)."""
+    warnings.warn(
+        f"{legacy} is deprecated; {replacement} "
+        f"(see docs/architecture.md, 'Query API & accuracy cascade')",
+        DeprecationWarning, stacklevel=3)
+
+
+__all__ = ["RFF_TIER", "PINNABLE_TIERS", "QueryRequest", "Answer",
+           "resolve_tier", "warn_legacy"]

@@ -1,0 +1,159 @@
+"""Certificate-gated accuracy cascade: RFF fast tier, exact escalation.
+
+The router behind the typed query API (``serve/api.py``): a request with
+an ``accuracy_target`` first runs the random-feature tier
+(``kernels/flash_rff.py``) — one small feature GEMM regardless of train
+size — and compares each query's certified band against its target.
+Rows whose band fits are answered immediately; the rest escalate to the
+pruned exact kernel through the engine's normal bucket dispatch.  A
+``precision="rff"`` pin skips the gate and answers everything at the
+fast tier (band reported as-is); an exact-tier pin skips the fast tier
+entirely.
+
+Certified bounds compose per row: fast-tier rows carry their RFF band,
+escalated rows the exact tier's accuracy ladder rtol
+(``plan/planner.TIER_RTOL``) plus any explicit prune-epsilon budget —
+the same per-row-tile certificate machinery the pruned kernels already
+account their error against.  The acceptance contract
+(``benchmarks/rff_cascade.py``, gated) is that realized error never
+exceeds the per-query bound.
+
+Every routing decision is observable: ``serve.cascade_hits`` /
+``serve.cascade_escalations`` counters, a ``serve.cascade_band``
+width histogram, and ``cascade=``/``hits=`` attributes on the dispatch
+span.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.kernels import flash_rff
+from repro.plan.planner import TIER_RTOL
+from repro.serve.api import RFF_TIER
+
+#: Band rows sampled into the width histogram per dispatch (bounded so a
+#: 4096-row batch doesn't pay 4096 histogram inserts on the hot path).
+_BAND_SAMPLE = 32
+
+# One jitted evaluator for every estimator/generation: the serving
+# tensors arrive as a pytree argument, so a refit or generation flip
+# reuses the compiled program for equal shapes instead of recompiling.
+_eval_jit = jax.jit(flash_rff.eval_density,
+                    static_argnames=("precision", "z"))
+
+
+class CascadeResult(NamedTuple):
+    """What one cascade dispatch resolved to."""
+
+    value: jnp.ndarray          # (m,) densities
+    bounds: np.ndarray          # (m,) certified relative-error bounds
+    hits: int                   # rows answered at the RFF tier
+    escalated: int              # rows escalated to the exact tier
+    path: Tuple[str, ...]       # tiers visited, in order
+    esc_rows: np.ndarray        # (m,) bool — which rows escalated
+
+
+def exact_bound(tier: str, prune) -> float:
+    """Certified relative bound of one exact-tier dispatch: the accuracy
+    ladder's tier rtol plus an explicit prune-epsilon budget (exact
+    "auto" pruning drops only certified-underflow tiles — no budget)."""
+    eps = float(prune) if isinstance(prune, (int, float)) \
+        and not isinstance(prune, bool) else 0.0
+    return TIER_RTOL.get(tier, TIER_RTOL["f32"]) + eps
+
+
+def engaged(cfg, prep, tier: str,
+            target: Optional[np.ndarray]) -> bool:
+    """Whether this request routes through the cascade at all.
+
+    An ``"rff"`` pin always engages; otherwise the config must enable
+    the tier, the estimator must support it (Gaussian kernel, non-ring
+    backend) and the request must carry an accuracy target to gate on.
+    """
+    if getattr(cfg, "rff", "off") == "off":
+        return tier == RFF_TIER
+    if not flash_rff.supports(cfg.method, cfg.backend):
+        return False
+    return tier == RFF_TIER or target is not None
+
+
+def evaluate(cfg, serving, y: jnp.ndarray,
+             bucket: Optional[int] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """One fast-tier evaluation: ``(p, band)`` as (m,) float64 arrays.
+
+    Pads the batch to ``bucket`` rows before the jitted evaluator so
+    ragged traffic reuses compiled shapes, then slices back.  Shared by
+    the engine cascade and the resilient layer's pre-shard cascade.
+    """
+    m = int(y.shape[0])
+    if bucket is None or bucket < m:
+        bucket = m
+    yp = jnp.pad(y, ((0, bucket - m), (0, 0))) if bucket > m else y
+    p, band = _eval_jit(serving, yp, precision=cfg.rff_precision)
+    return (np.asarray(p[:m], np.float64),
+            np.asarray(band[:m], np.float64))
+
+
+def run(engine, prep, y: jnp.ndarray, tier: str,
+        target: Optional[np.ndarray], *,
+        snap=None) -> Optional[CascadeResult]:
+    """Route one (possibly fused) query batch through the cascade.
+
+    ``tier`` is the precedence-resolved tier — ``"rff"`` pins the fast
+    tier, anything else is the escalation tier.  ``target`` is the
+    per-row accuracy-target vector (fused ``query_many`` batches carry
+    per-request targets), or None when only a pin engaged the cascade.
+    Returns None when the RFF state is unavailable (unsupported method,
+    ``rff="off"`` while pinned — the caller falls back to exact and, for
+    a hard ``"rff"`` pin, raises).
+    """
+    cfg = prep.config
+    serving = engine.registry.rff_serving(prep, snap=snap)
+    if serving is None:
+        return None
+    pinned = tier == RFF_TIER
+    exact_tier = cfg.exact_precision if pinned else tier
+
+    m = int(y.shape[0])
+    p, band = evaluate(cfg, serving, y,
+                       cfg.bucket_for(m, prep.ring_size, prep.block_m))
+
+    if pinned or target is None:
+        mask = np.zeros(m, bool)                  # pin: nothing escalates
+    else:
+        mask = band > target
+    hits = int(m - mask.sum())
+    esc = int(mask.sum())
+
+    value = jnp.asarray(p, jnp.float32)
+    bounds = band.copy()
+    path: Tuple[str, ...] = (RFF_TIER,)
+    if esc:
+        dens = engine._dispatch(prep, y[np.flatnonzero(mask)], exact_tier)
+        value = value.at[jnp.asarray(np.flatnonzero(mask))].set(
+            jnp.asarray(dens, jnp.float32))
+        bounds[mask] = exact_bound(exact_tier, cfg.prune)
+        path = (RFF_TIER, exact_tier)
+
+    obs.counter("serve.cascade_hits",
+                "query rows answered at the RFF fast tier").inc(hits)
+    if esc:
+        obs.counter("serve.cascade_escalations",
+                    "query rows escalated to the exact tier").inc(esc)
+    hist = obs.histogram("serve.cascade_band",
+                         "certified RFF band width per sampled query row",
+                         lo=1e-6, hi=1e2)
+    for b in band[:: max(1, m // _BAND_SAMPLE)]:
+        hist.observe(max(float(b), 1e-6))
+    return CascadeResult(value=value, bounds=bounds, hits=hits,
+                         escalated=esc, path=path, esc_rows=mask)
+
+
+__all__ = ["CascadeResult", "exact_bound", "engaged", "evaluate", "run"]

@@ -15,6 +15,9 @@ from repro.kernels.precision import validate as _validate_precision
 Backend = Literal["jnp", "pallas", "ring"]
 Method = Literal["kde", "sdkde", "laplace"]
 Precision = Literal["f32", "bf16", "bf16x2"]   # = kernels.precision.PRECISIONS
+# a *serving* tier is an exact GEMM tier or the RFF fast tier; the fit
+# tier and the feature-GEMM tier stay exact
+ServeTier = Literal["f32", "bf16", "bf16x2", "rff"]
 BlockArg = Union[int, Literal["auto"]]
 
 
@@ -42,10 +45,12 @@ class ServeConfig:
     block_n: BlockArg = 512      # Pallas column tile (int or "auto")
     interpret: bool = True       # Pallas interpret mode (CPU validation)
     score_h: Optional[float] = None
-    # Pallas GEMM-operand tier (kernels/precision.py): the tier queries are
-    # served at by default; query()/query_many() may override per request,
-    # and the registry caches prepared train tensors per tier.
-    precision: Precision = "f32"
+    # Default serving tier: a GEMM-operand tier (kernels/precision.py) or
+    # "rff", the random-feature fast tier (kernels/flash_rff.py).  A
+    # QueryRequest precision pin overrides per request (precedence:
+    # request pin > explicit config > planner); the registry caches
+    # prepared train tensors per exact tier.
+    precision: ServeTier = "f32"
     # Tier for the one-time O(n²·d) debias fit.  The fit is amortized off
     # the latency path, so it defaults to full precision regardless of the
     # serving tier — reduced-precision *queries* perturb one GEMM, while a
@@ -85,6 +90,18 @@ class ServeConfig:
     plan: Literal["off", "auto"] = "off"
     accuracy_target: Optional[float] = None
 
+    # RFF fast tier + accuracy cascade (kernels/flash_rff.py,
+    # serve/cascade.py).  "auto" fits the per-generation RFF state lazily
+    # on the first cascade-routed request (requests without an accuracy
+    # target never pay for it); "on" fits it eagerly with the debias
+    # pass; "off" disables the tier (an "rff" pin then raises).
+    rff: Literal["off", "auto", "on"] = "auto"
+    rff_features: int = 8192     # D: total cos+sin features per dataset
+    rff_pilot: int = 256         # pilot control-variate mixture size
+    rff_groups: int = 32         # frequency groups behind the band (the
+                                 # band's t-statistic dof; see flash_rff)
+    rff_precision: Precision = "f32"   # feature-GEMM operand tier
+
     def __post_init__(self):
         if self.min_batch <= 0 or self.max_batch < self.min_batch:
             raise ValueError(
@@ -92,8 +109,25 @@ class ServeConfig:
             )
         if self.cache_buckets < 1:
             raise ValueError("cache_buckets must be >= 1")
-        for p in (self.precision, self.fit_precision):
+        if self.precision != "rff":
+            _validate_precision(self.precision)
+        for p in (self.fit_precision, self.rff_precision):
             _validate_precision(p)
+        if self.rff not in ("off", "auto", "on"):
+            raise ValueError(
+                f"bad rff {self.rff!r} ('off', 'auto', or 'on')")
+        if self.precision == "rff" and self.rff == "off":
+            raise ValueError(
+                "precision='rff' needs the RFF tier enabled (rff='auto' "
+                "or 'on')")
+        if self.rff_pilot < 1 or self.rff_groups < 2:
+            raise ValueError("need rff_pilot >= 1 and rff_groups >= 2")
+        if self.rff_features < 2 * self.rff_groups \
+                or self.rff_features % (2 * self.rff_groups):
+            raise ValueError(
+                f"rff_features must be a positive multiple of "
+                f"2·rff_groups, got {self.rff_features} with "
+                f"groups={self.rff_groups}")
         for b in (self.block_m, self.block_n):
             if not (b == "auto" or (isinstance(b, int) and b > 0)):
                 raise ValueError(f"bad Pallas block {b!r} (int or 'auto')")
@@ -121,6 +155,13 @@ class ServeConfig:
                 "(the ring shards at fit time; re-sharding per append is "
                 "a full refit by construction)"
             )
+
+    @property
+    def exact_precision(self) -> str:
+        """The exact GEMM tier behind the default serving tier — what the
+        registry prepares train columns at and what cascade escalations
+        run when the default tier is ``"rff"``."""
+        return "f32" if self.precision == "rff" else self.precision
 
     def row_multiple(self, ring_size: int = 1,
                      block_m: Optional[int] = None) -> int:
@@ -164,4 +205,5 @@ class ServeConfig:
         return sizes[-1]  # chunked by the engine
 
 
-__all__ = ["Backend", "Method", "Precision", "BlockArg", "ServeConfig"]
+__all__ = ["Backend", "Method", "Precision", "ServeTier", "BlockArg",
+           "ServeConfig"]

@@ -2,11 +2,18 @@
 
 Request lifecycle (see docs/architecture.md):
 
-  register(key, x)      — one-time: debias (sdkde), precompute layouts, cache
-  query(key, y)         — pad y to a shape bucket, run the bucket executable,
-                          slice, record latency
-  query_many(key, [y…]) — coalesce several ragged requests into ONE padded
-                          dispatch, then split the fused densities back out
+  register(key, x)         — one-time: debias (sdkde), precompute layouts,
+                             cache, optionally fit the RFF fast tier
+  query(QueryRequest)      — resolve the tier (request pin > explicit config
+                             > planner), route through the accuracy cascade
+                             when a target gates it, pad to a shape bucket,
+                             run the bucket executable, return an Answer
+                             with per-row certified bounds
+  query_many([requests…])  — coalesce several ragged requests into ONE padded
+                             dispatch, then split the fused Answer back out
+
+Legacy ``query(key, y)`` / ``query_many(key, [y…])`` signatures still work
+behind ``DeprecationWarning`` shims and return bare density arrays.
 
 All three backends dispatch through the same bucket executables, built
 lazily per (estimator, bucket) and kept in a small LRU:
@@ -23,12 +30,16 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import fault_injection, obs
+from repro.serve import cascade
+from repro.serve.api import (RFF_TIER, Answer, QueryRequest, resolve_tier,
+                             warn_legacy)
 from repro.serve.batching import ShapeBucketCache, coalesce, pad_queries, split
 from repro.serve.config import ServeConfig
 from repro.serve.errors import BadRequest, DeadlineExceeded
@@ -88,7 +99,7 @@ class ServeEngine:
         served latency."""
         prep = self.registry.get(key)
         cfg = prep.config
-        tier = cfg.precision
+        tier = cfg.exact_precision
         sizes = cfg.bucket_sizes(prep.ring_size, prep.block_m)
         targets = sizes if all_buckets else sizes[-1:]
         with obs.span("plan.prewarm", key=key, buckets=len(targets),
@@ -106,60 +117,238 @@ class ServeEngine:
 
     # -- query path ------------------------------------------------------
 
-    def query(self, key: str, y: jnp.ndarray,
+    def query(self, request: Union[QueryRequest, str],
+              y: Optional[jnp.ndarray] = None,
               precision: Optional[str] = None,
-              deadline_s: Optional[float] = None) -> jnp.ndarray:
-        """Densities for one request; pads to a bucket, times the dispatch.
+              deadline_s: Optional[float] = None,
+              ) -> Union[Answer, jnp.ndarray]:
+        """Serve one request.
 
-        ``precision`` overrides the config's GEMM-operand tier for this
-        request (pallas backend; prepared train tensors are cached per
-        tier, so mixing tiers on one estimator costs one extra prepare).
+        Typed API: pass a :class:`~repro.serve.api.QueryRequest`, receive
+        an :class:`~repro.serve.api.Answer`.  This is the only path that
+        routes through the accuracy cascade — a request carrying an
+        ``accuracy_target`` (or a config-level default) first runs the
+        RFF fast tier and escalates only the rows whose certified band
+        misses the target; ``request.precision`` pins a tier outright
+        (precedence: request pin > explicit config > planner).  The
+        request's ``deadline_s`` is *relative* seconds from admission.
 
-        ``deadline_s`` is an absolute ``time.monotonic()`` instant: a
-        request whose deadline has already passed raises
+        Legacy API (deprecated): ``query(key, y, precision=, deadline_s=)``
+        returns the bare densities array; its ``deadline_s`` is an
+        absolute ``time.monotonic()`` instant, and it never engages the
+        cascade (unless the config's default tier itself is ``"rff"``),
+        exactly as before the typed API existed.
+
+        Either way, a request past its deadline raises
         ``DeadlineExceeded`` before any compute, and an answer that
-        completes past it raises too — a late density is not an answer
-        (the admission front end propagates its per-request deadlines
-        here, so plain engines honor them like ``ResilientEngine`` does).
+        completes past it raises too — a late density is not an answer.
         """
-        prep = self.registry.get(key)
-        y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
-        self._check_query(prep, y)
-        self._check_deadline(key, deadline_s, phase="dispatch")
-        with obs.span("serve.request", key=key, rows=int(y.shape[0]),
-                      requests=1):
-            t0 = time.perf_counter()
-            dens = jax.block_until_ready(fault_injection.poison(
-                "serve.result", self._dispatch(prep, y, precision)))
-            dt = time.perf_counter() - t0
-        self._check_deadline(key, deadline_s, phase="answer")
-        self._note_served(dt, y.shape[0], 1)
-        return dens
+        if isinstance(request, QueryRequest):
+            if y is not None or precision is not None \
+                    or deadline_s is not None:
+                raise BadRequest(
+                    "pass either a QueryRequest or the legacy "
+                    "(key, y, ...) arguments, not both")
+            return self._query_request(request)
+        warn_legacy("ServeEngine.query(key, y, ...)",
+                    "ServeEngine.query(QueryRequest(...)) -> Answer")
+        req = QueryRequest(key=request, points=y, precision=precision)
+        ans = self._query_request(req, deadline_abs=deadline_s, legacy=True)
+        return ans.value
 
     def query_many(
-        self, key: str, batches: Sequence[jnp.ndarray],
+        self,
+        requests: Union[Sequence[QueryRequest], str],
+        batches: Optional[Sequence[jnp.ndarray]] = None,
         precision: Optional[str] = None,
         deadline_s: Optional[float] = None,
-    ) -> List[jnp.ndarray]:
+    ) -> Union[List[Answer], List[jnp.ndarray]]:
         """Coalesce several ragged requests into one padded dispatch.
 
-        ``deadline_s`` (absolute monotonic) covers the fused dispatch:
-        callers batching requests with distinct deadlines should pass the
-        *latest* one and re-check the earlier deadlines per member.
+        Typed API: a non-empty sequence of :class:`QueryRequest` sharing
+        one key and one precision pin (coalesce upstream per
+        ``(key, precision)`` — the async front end already does) returns
+        one :class:`Answer` per request, each carrying its own slice of
+        the fused per-row certified bounds and cascade counters.
+        Members' ``accuracy_target`` may differ: the cascade gates row
+        ranges independently, and members without a target (and no
+        config default) always resolve at the exact tier.  The fused
+        dispatch runs under the *latest* member deadline — per-member
+        lateness is the upstream batcher's call.
+
+        Legacy API (deprecated): ``query_many(key, batches, ...)`` with
+        an absolute monotonic ``deadline_s`` returns bare density arrays.
         """
+        if batches is None and not isinstance(requests, str):
+            reqs = list(requests)
+            if not reqs or not all(isinstance(r, QueryRequest)
+                                   for r in reqs):
+                raise BadRequest(
+                    "query_many takes a non-empty sequence of QueryRequest "
+                    "(or the legacy key + batches arguments)")
+            key, pin = reqs[0].key, reqs[0].precision
+            for r in reqs[1:]:
+                if r.key != key or r.precision != pin:
+                    raise BadRequest(
+                        "fused query_many requests must share one key and "
+                        "one precision pin — coalesce upstream per "
+                        "(key, precision)")
+            prep = self.registry.get(key)
+            fused, sizes = coalesce([
+                jnp.atleast_2d(jnp.asarray(r.points, jnp.float32))
+                for r in reqs])
+            self._check_query(prep, fused)
+            now = time.monotonic()
+            member_dl = [now + r.deadline_s for r in reqs
+                         if r.deadline_s is not None]
+            fused_dl = max(member_dl) if member_dl else None
+            self._check_deadline(key, fused_dl, phase="dispatch")
+            with obs.span("serve.request", key=key,
+                          rows=int(fused.shape[0]), requests=len(sizes)):
+                t0 = time.perf_counter()
+                ans, esc_rows = self._serve(prep, fused, reqs, sizes)
+                ans.value = jax.block_until_ready(fault_injection.poison(
+                    "serve.result", ans.value))
+                dt = time.perf_counter() - t0
+            self._check_deadline(key, fused_dl, phase="answer")
+            self._note_served(dt, fused.shape[0], len(sizes))
+            return self._split_answer(ans, reqs, sizes, esc_rows, dt)
+        warn_legacy(
+            "ServeEngine.query_many(key, batches, ...)",
+            "ServeEngine.query_many([QueryRequest, ...]) -> [Answer, ...]")
+        key = requests
+        reqs = [QueryRequest(key=key, points=b, precision=precision)
+                for b in batches]
         prep = self.registry.get(key)
-        fused, sizes = coalesce(batches)
+        fused, sizes = coalesce([
+            jnp.atleast_2d(jnp.asarray(b, jnp.float32)) for b in batches])
         self._check_query(prep, fused)
         self._check_deadline(key, deadline_s, phase="dispatch")
         with obs.span("serve.request", key=key, rows=int(fused.shape[0]),
                       requests=len(sizes)):
             t0 = time.perf_counter()
+            ans, _ = self._serve(prep, fused, reqs, sizes, legacy=True)
             dens = jax.block_until_ready(fault_injection.poison(
-                "serve.result", self._dispatch(prep, fused, precision)))
+                "serve.result", ans.value))
             dt = time.perf_counter() - t0
         self._check_deadline(key, deadline_s, phase="answer")
         self._note_served(dt, fused.shape[0], len(sizes))
         return split(dens, sizes)
+
+    def _query_request(self, req: QueryRequest, *,
+                       deadline_abs: Optional[float] = None,
+                       legacy: bool = False) -> Answer:
+        prep = self.registry.get(req.key)
+        y = jnp.atleast_2d(jnp.asarray(req.points, jnp.float32))
+        self._check_query(prep, y)
+        if deadline_abs is None and req.deadline_s is not None:
+            deadline_abs = time.monotonic() + req.deadline_s
+        self._check_deadline(req.key, deadline_abs, phase="dispatch")
+        with obs.span("serve.request", key=req.key, rows=int(y.shape[0]),
+                      requests=1):
+            t0 = time.perf_counter()
+            ans, _ = self._serve(prep, y, [req], [int(y.shape[0])],
+                                 legacy=legacy)
+            ans.value = jax.block_until_ready(fault_injection.poison(
+                "serve.result", ans.value))
+            dt = time.perf_counter() - t0
+        self._check_deadline(req.key, deadline_abs, phase="answer")
+        self._note_served(dt, y.shape[0], 1)
+        ans.latency_s = dt
+        return ans
+
+    def _serve(self, prep: PreparedEstimator, y: jnp.ndarray,
+               reqs: Sequence[QueryRequest], sizes: Sequence[int], *,
+               legacy: bool = False):
+        """Resolve the tier, route through the cascade when engaged, and
+        assemble one fused :class:`Answer` for ``y`` (per-request slicing
+        is the caller's job).  Returns ``(answer, esc_rows)`` where
+        ``esc_rows`` marks the fused rows that escalated."""
+        cfg = prep.config
+        tier, overrode = resolve_tier(reqs[0].precision, cfg.precision,
+                                      prep.plan)
+        if overrode:
+            obs.counter(
+                "serve.pin_overrides_plan",
+                "requests whose precision pin overrode the planner tier",
+            ).inc()
+        m = int(y.shape[0])
+        target = None if legacy else self._targets(cfg, reqs, sizes)
+        snap = (prep.stream.ensure(cfg.staleness_budget)
+                if prep.stream is not None else None)
+        res = None
+        # an explicit exact-tier pin skips the fast tier entirely — the
+        # pin IS the routing decision; only unpinned requests (or an
+        # "rff" pin) consult the cascade gate
+        if tier == RFF_TIER or (not legacy and reqs[0].precision is None
+                                and cascade.engaged(cfg, prep, tier, target)):
+            res = cascade.run(self, prep, y, tier, target, snap=snap)
+            if res is None and tier == RFF_TIER:
+                raise BadRequest(
+                    f"precision='rff' pinned but the RFF tier is "
+                    f"unavailable for method={cfg.method!r} "
+                    f"backend={cfg.backend!r} (rff={cfg.rff!r})")
+        if res is not None:
+            value, bounds = res.value, res.bounds
+            hits, esc, path = res.hits, res.escalated, res.path
+            esc_rows = res.esc_rows
+        else:
+            exact = cfg.exact_precision if tier == RFF_TIER else tier
+            value = self._dispatch(prep, y, exact)
+            bounds = np.full(m, cascade.exact_bound(exact, cfg.prune))
+            hits, esc, path = 0, 0, (exact,)
+            esc_rows = np.zeros(m, bool)
+        staleness = (prep.stream.gen - snap.gen) if snap is not None else 0
+        ans = Answer(
+            value=value, key=prep.key, tier=path[-1], path=path,
+            rel_err_bound=float(bounds.max()) if m else 0.0,
+            rel_err_bounds=bounds, rff_hits=hits, escalated=esc,
+            staleness=staleness,
+            plan_id=getattr(prep.plan, "plan_id", "") or "",
+        )
+        return ans, esc_rows
+
+    @staticmethod
+    def _targets(cfg: ServeConfig, reqs: Sequence[QueryRequest],
+                 sizes: Sequence[int]):
+        """Per-row accuracy-target vector for a fused batch, or None when
+        no member carries one.  A request target beats the config
+        default; a member with neither gets ``-inf`` so its rows always
+        escalate — an untargeted request expects an exact-grade answer
+        even when fused with cascade-routed neighbors."""
+        per = [r.accuracy_target if r.accuracy_target is not None
+               else cfg.accuracy_target for r in reqs]
+        if all(t is None for t in per):
+            return None
+        out = np.empty(int(sum(sizes)))
+        off = 0
+        for t, s in zip(per, sizes):
+            out[off:off + s] = -np.inf if t is None else float(t)
+            off += s
+        return out
+
+    @staticmethod
+    def _split_answer(ans: Answer, reqs: Sequence[QueryRequest],
+                      sizes: Sequence[int], esc_rows: np.ndarray,
+                      dt: float) -> List[Answer]:
+        parts = split(ans.value, sizes)
+        offs = np.cumsum([0] + list(sizes))
+        cascaded = RFF_TIER in ans.path
+        out = []
+        for i, dens in enumerate(parts):
+            lo, hi = int(offs[i]), int(offs[i + 1])
+            rows = hi - lo
+            b = ans.rel_err_bounds[lo:hi]
+            esc = int(esc_rows[lo:hi].sum()) if cascaded else 0
+            hits = rows - esc if cascaded else 0
+            path = (RFF_TIER,) if cascaded and not esc else ans.path
+            out.append(Answer(
+                value=dens, key=ans.key, tier=path[-1], path=path,
+                rel_err_bound=float(b.max()) if rows else 0.0,
+                rel_err_bounds=b, rff_hits=hits, escalated=esc,
+                staleness=ans.staleness, plan_id=ans.plan_id,
+                latency_s=dt, batch_requests=len(reqs)))
+        return out
 
     @staticmethod
     def _check_query(prep: PreparedEstimator, y: jnp.ndarray) -> None:
@@ -236,7 +425,12 @@ class ServeEngine:
     def _dispatch(self, prep: PreparedEstimator, y: jnp.ndarray,
                   precision: Optional[str] = None) -> jnp.ndarray:
         cfg = prep.config
-        tier = precision or cfg.precision
+        # _dispatch is the *exact* dispatcher — the RFF fast tier routes
+        # through serve/cascade.py, which calls back here only for
+        # escalated rows at the escalation tier
+        tier = precision or cfg.exact_precision
+        if tier == RFF_TIER:
+            raise BadRequest("the RFF tier has no exact dispatch path")
         snap = None
         sp = obs.span("serve.dispatch", key=prep.key, backend=cfg.backend,
                       tier=tier, rows=int(y.shape[0]))

@@ -82,6 +82,7 @@ import numpy as np
 from repro import fault_injection, obs
 from repro.fault_injection import InjectedFailure
 from repro.plan.planner import TIER_ORDER
+from repro.serve.api import RFF_TIER, Answer, QueryRequest, warn_legacy
 from repro.serve.batching import coalesce, split
 from repro.serve.engine import ServeEngine
 from repro.serve.errors import DeadlineExceeded, Overloaded, ServeError
@@ -117,7 +118,11 @@ class FrontendConfig:
     aimd_decrease: float = 0.5    # ×rate per breach signal
     p99_slo_ms: float = 250.0     # dispatch-latency SLO feeding AIMD
     # brownout: pressure level → tier override for requests with no
-    # explicit precision (None = serve the engine-config tier)
+    # explicit precision (None = serve the engine-config tier).  Any
+    # exact ladder rung (TIER_ORDER) or "rff" is valid — an RFF rung
+    # sheds *work* hardest of all (one train-independent feature GEMM,
+    # band still attached), but only on engines whose method/backend the
+    # RFF tier supports, so it is opt-in rather than the default.
     brownout_tiers: Tuple[Optional[str], ...] = (None, None, TIER_ORDER[-1])
     brownout_degraded: bool = True   # shedding + resilient → opt into
                                      # certified degraded answers
@@ -144,7 +149,7 @@ class FrontendConfig:
         if len(self.brownout_tiers) != 3:
             raise ValueError("brownout_tiers maps the 3 pressure levels")
         for t in self.brownout_tiers:
-            if t is not None and t not in TIER_ORDER:
+            if t is not None and t not in TIER_ORDER + (RFF_TIER,):
                 raise ValueError(f"unknown brownout tier {t!r}")
 
 
@@ -271,18 +276,11 @@ class AdmissionStateMachine:
                     labels={"to": to}).inc()
 
 
-@dataclasses.dataclass
-class FrontendAnswer:
-    """Densities plus the admission provenance a frontend caller needs."""
-
-    densities: jnp.ndarray
-    tier: Optional[str] = None       # precision actually served (None = cfg)
-    degraded: bool = False           # certified partial-backend answer
-    browned: bool = False            # tier shed by the brownout ladder
-    state: str = ACCEPTING           # admission state at dispatch
-    queued_ms: float = 0.0           # admit → dispatch wait
-    batch_requests: int = 1          # requests fused into the dispatch
-    rel_err_bound: float = 0.0       # certified bound (degraded only)
+# The frontend resolves futures to the same typed Answer the engines
+# return (serve/api.py), with the admission provenance fields
+# (state/queued_ms/browned/batch_requests) filled in.  The old name stays
+# as an alias for callers that imported it.
+FrontendAnswer = Answer
 
 
 @dataclasses.dataclass
@@ -300,6 +298,8 @@ class _Pending:
     enq: float
     retries: int = 0
     synthetic: bool = False          # chaos client_burst duplicate
+    accuracy_target: Optional[float] = None   # cascade gate, per request
+    allow_degraded: Optional[bool] = None     # resilient opt-in override
 
     def entry(self):
         return (self.deadline, self.seq, self)
@@ -365,16 +365,38 @@ class AsyncFrontend:
 
     # -- admission --------------------------------------------------------
 
-    def submit(self, key: str, y, *, deadline_s: Optional[float] = None,
+    def submit(self, request, y=None, *,
+               deadline_s: Optional[float] = None,
                precision: Optional[str] = None) -> Future:
         """Admit one request; returns its future or raises ``Overloaded``.
 
+        Typed API: pass a :class:`~repro.serve.api.QueryRequest` — its
         ``deadline_s`` is *relative* seconds from now (default
-        ``config.default_deadline_ms``); the absolute deadline rides the
-        request end to end.  The admit decision is synchronous: a shed
-        request fails HERE, typed, with the shed reason — it never enters
-        the queue, and nothing about it is silent.
+        ``config.default_deadline_ms``), its ``accuracy_target`` rides
+        into the engine's cascade, its ``precision`` pin wins over the
+        brownout ladder, and its ``allow_degraded`` overrides the
+        resilient engine's default.  The future resolves to an
+        :class:`~repro.serve.api.Answer`.
+
+        Legacy API (deprecated): ``submit(key, y, deadline_s=,
+        precision=)``.
+
+        The admit decision is synchronous: a shed request fails HERE,
+        typed, with the shed reason — it never enters the queue, and
+        nothing about it is silent.
         """
+        if isinstance(request, QueryRequest):
+            if y is not None or precision is not None \
+                    or deadline_s is not None:
+                raise ValueError(
+                    "pass either a QueryRequest or the legacy "
+                    "(key, y, ...) arguments, not both")
+            req = request
+        else:
+            warn_legacy("AsyncFrontend.submit(key, y, ...)",
+                        "AsyncFrontend.submit(QueryRequest(...))")
+            req = QueryRequest(key=request, points=y, precision=precision,
+                               deadline_s=deadline_s)
         self.stats["submitted"] += 1
         # chaos: a stalled admission thread blocks its caller right here,
         # before any admission decision — arrivals back up behind it.
@@ -384,33 +406,40 @@ class AsyncFrontend:
         inj = fault_injection.active()
         if inj is not None and not self._resilient:
             inj.begin_request()
-        fault_injection.fire("serve.admit", key=key)
+        fault_injection.fire("serve.admit", key=req.key)
         nburst = fault_injection.burst("serve.admit")
-        y = np.atleast_2d(np.asarray(y, np.float32))
+        pts = np.atleast_2d(np.asarray(req.points, np.float32))
         if nburst:
-            self._inject_burst(key, y, nburst)
+            self._inject_burst(req.key, pts, nburst)
         rel = (self.config.default_deadline_ms / 1e3
-               if deadline_s is None else deadline_s)
-        return self._admit(key, y, rel, precision, synthetic=False)
+               if req.deadline_s is None else req.deadline_s)
+        return self._admit(req.key, pts, rel, req.precision,
+                           synthetic=False,
+                           accuracy_target=req.accuracy_target,
+                           allow_degraded=req.allow_degraded)
 
-    def query(self, key: str, y, *, deadline_s: Optional[float] = None,
-              precision: Optional[str] = None) -> FrontendAnswer:
+    def query(self, request, y=None, *,
+              deadline_s: Optional[float] = None,
+              precision: Optional[str] = None) -> Answer:
         """Blocking convenience: ``submit`` + wait (typed errors raise)."""
-        return self.submit(key, y, deadline_s=deadline_s,
+        return self.submit(request, y, deadline_s=deadline_s,
                            precision=precision).result()
 
-    async def aquery(self, key: str, y, *,
+    async def aquery(self, request, y=None, *,
                      deadline_s: Optional[float] = None,
-                     precision: Optional[str] = None) -> FrontendAnswer:
+                     precision: Optional[str] = None) -> Answer:
         """Awaitable ``query`` for asyncio callers (one shared wrapper:
         the future the dispatcher resolves IS the awaited one)."""
         import asyncio
 
         return await asyncio.wrap_future(
-            self.submit(key, y, deadline_s=deadline_s, precision=precision))
+            self.submit(request, y, deadline_s=deadline_s,
+                        precision=precision))
 
     def _admit(self, key: str, y, rel_deadline: float,
-               precision: Optional[str], *, synthetic: bool) -> Future:
+               precision: Optional[str], *, synthetic: bool,
+               accuracy_target: Optional[float] = None,
+               allow_degraded: Optional[bool] = None) -> Future:
         cfg = self.config
         fut: Future = Future()
         now = self._clock()
@@ -436,7 +465,9 @@ class AsyncFrontend:
             p = _Pending(deadline=now + rel_deadline, seq=self._seq,
                          key=key, y=y, rows=int(y.shape[0]),
                          precision=precision, future=fut, enq=now,
-                         synthetic=synthetic)
+                         synthetic=synthetic,
+                         accuracy_target=accuracy_target,
+                         allow_degraded=allow_degraded)
             heapq.heappush(self._heap, p.entry())
             self.stats["admitted"] += 1
             if synthetic:
@@ -565,6 +596,13 @@ class AsyncFrontend:
             if (head.key != first.key or head.precision != first.precision
                     or rows + head.rows > max_rows):
                 break
+            if self._resilient and (
+                    head.accuracy_target != first.accuracy_target
+                    or head.allow_degraded != first.allow_degraded):
+                # the resilient engine serves one fused request — members
+                # must share its accuracy/degradation knobs; the plain
+                # engine's typed query_many gates targets per member
+                break
             heapq.heappop(self._heap)
             now = self._clock()
             if now >= head.deadline:
@@ -609,14 +647,10 @@ class AsyncFrontend:
                             "dispatches tier-shed by queue pressure",
                             labels={"tier": tier}).inc(len(batch))
                     if self._resilient:
-                        dens_list, degraded, bound = (
-                            self._dispatch_resilient(batch, tier, level))
+                        answers = self._dispatch_resilient(
+                            batch, tier, level)
                     else:
-                        dens_list = self.engine.query_many(
-                            batch[0].key, [p.y for p in batch],
-                            precision=tier,
-                            deadline_s=max(p.deadline for p in batch))
-                        degraded, bound = False, 0.0
+                        answers = self._dispatch_plain(batch, tier)
             except InjectedFailure:
                 self._requeue(batch)
                 return
@@ -632,28 +666,54 @@ class AsyncFrontend:
                 self._resolve_error(batch, e)
                 return
             dt = self._clock() - t0
-            self._finish(batch, dens_list, tier, degraded, browned, bound,
-                         state, dt)
+            self._finish(batch, answers, browned, state, dt)
         finally:
             with self._cv:
                 self._inflight -= 1
                 self._cv.notify_all()
 
+    def _dispatch_plain(self, batch: List[_Pending],
+                        tier: Optional[str]) -> List[Answer]:
+        """Typed fused dispatch through ``ServeEngine.query_many`` — one
+        QueryRequest per member, so per-member accuracy targets gate the
+        cascade row ranges independently."""
+        now = self._clock()
+        reqs = [QueryRequest(
+            key=p.key, points=p.y, precision=tier,
+            accuracy_target=p.accuracy_target,
+            deadline_s=max(p.deadline - now, 1e-3)) for p in batch]
+        return self.engine.query_many(reqs)
+
     def _dispatch_resilient(self, batch: List[_Pending],
-                            tier: Optional[str], level: int):
+                            tier: Optional[str], level: int
+                            ) -> List[Answer]:
         """One fused dispatch through ``ResilientEngine.query`` — the
         shedding rung of the brownout ladder opts into certified degraded
-        answers even when the engine's default would refuse them."""
+        answers even when the engine's default would refuse them.  The
+        fused Answer is split back into one per member, each carrying its
+        slice of the per-row bounds."""
         cfg = self.config
         fused, sizes = coalesce([p.y for p in batch])
-        budget_ms = max(
-            1e3 * (max(p.deadline for p in batch) - self._clock()), 1.0)
-        allow = True if (level >= 2 and cfg.brownout_degraded) else None
-        ans = self.engine.query(
-            batch[0].key, fused, precision=tier, deadline_ms=budget_ms,
-            allow_degraded=allow)
-        return (split(ans.densities, sizes), ans.degraded,
-                ans.rel_err_bound)
+        budget_s = max(
+            max(p.deadline for p in batch) - self._clock(), 1e-3)
+        allow = batch[0].allow_degraded
+        if level >= 2 and cfg.brownout_degraded:
+            allow = True
+        ans = self.engine.query(QueryRequest(
+            key=batch[0].key, points=fused, precision=tier,
+            accuracy_target=batch[0].accuracy_target,
+            deadline_s=budget_s, allow_degraded=allow))
+        parts = split(ans.value, sizes)
+        offs = np.cumsum([0] + list(sizes))
+        out = []
+        for i, dens in enumerate(parts):
+            b = (ans.rel_err_bounds[int(offs[i]):int(offs[i + 1])]
+                 if ans.rel_err_bounds is not None else None)
+            out.append(dataclasses.replace(
+                ans, value=dens, rel_err_bounds=b,
+                rel_err_bound=(float(b.max()) if b is not None and b.size
+                               else ans.rel_err_bound)))
+        return out
 
     def _requeue(self, batch: List[_Pending]) -> None:
         """Chaos on the dispatch path: retry each member (bounded), then
@@ -687,11 +747,10 @@ class AsyncFrontend:
         for p in batch:
             p.future.set_exception(err)
 
-    def _finish(self, batch, dens_list, tier, degraded, browned, bound,
-                state, dispatch_s) -> None:
+    def _finish(self, batch, answers, browned, state, dispatch_s) -> None:
         now = self._clock()
         late = 0
-        for p, dens in zip(batch, dens_list):
+        for p, ans in zip(batch, answers):
             if now > p.deadline:
                 late += 1
                 p.future.set_exception(DeadlineExceeded(
@@ -699,15 +758,15 @@ class AsyncFrontend:
                     f"{1e3 * (now - p.deadline):.1f}ms past its deadline"))
                 continue
             self.stats["answered"] += 1
-            if degraded:
+            if ans.degraded:
                 self.stats["degraded"] += 1
             if browned:
                 self.stats["browned"] += 1
-            p.future.set_result(FrontendAnswer(
-                densities=dens, tier=tier, degraded=degraded,
-                browned=browned, state=state,
-                queued_ms=1e3 * max(now - dispatch_s - p.enq, 0.0),
-                batch_requests=len(batch), rel_err_bound=bound))
+            ans.browned = browned
+            ans.state = state
+            ans.queued_ms = 1e3 * max(now - dispatch_s - p.enq, 0.0)
+            ans.batch_requests = len(batch)
+            p.future.set_result(ans)
         if late:
             self.stats["late"] += late
             obs.counter("frontend.late_answers",

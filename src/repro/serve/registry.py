@@ -13,11 +13,13 @@ side work per request.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro import fault_injection
+from repro import fault_injection, obs
 from repro.core import bandwidth as bw
 from repro.core import kde as ref
 from repro.core.bandwidth import gaussian_norm_const
@@ -55,6 +57,13 @@ class PreparedEstimator:
     # tracing (every dispatch span carries plan.plan_id) and prewarming.
     # None when the config pinned every knob by hand.
     plan: object = None
+    # RFF fast tier (kernels/flash_rff.py): the per-generation random-
+    # feature state behind the accuracy cascade.  Fitted eagerly with the
+    # debias pass when config.rff == "on", lazily on the first cascade-
+    # routed request under "auto"; a streaming estimator's tier re-syncs
+    # to each served snapshot (incremental by id diff, full refit on
+    # layout-epoch rebuilds).
+    rff: object = None
     _columns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
@@ -97,7 +106,7 @@ class PreparedEstimator:
     def _default_columns(self):
         if self.config.backend != "pallas":
             return None
-        return self.columns_for(self.config.precision)
+        return self.columns_for(self.config.exact_precision)
 
     @property
     def xt(self) -> Optional[jnp.ndarray]:
@@ -113,6 +122,88 @@ class PreparedEstimator:
     def nrm_x(self) -> Optional[jnp.ndarray]:
         cols = self._default_columns()
         return None if cols is None else cols.nrm_x
+
+
+class _RFFTier:
+    """Lifecycle of one estimator's RFF fast-tier state.
+
+    Owns the fit (once per static generation) and the streaming refit
+    policy: consecutive snapshots are diffed by live id — appended,
+    evicted AND debias-shifted rows fold into the exact feature sums as
+    an O(b·D·d/2) delta — while a layout-epoch rebuild (re-cluster)
+    triggers the full refit, since the pilot anchors are stale by
+    construction then.
+    """
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        self.state = None
+        self._epoch: Optional[int] = None
+        self._gen: Optional[int] = None
+        self._ids: Optional[np.ndarray] = None
+        self._points: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+
+    def _fit(self, points, h: float):
+        from repro.kernels import flash_rff
+
+        cfg = self.cfg
+        with obs.span("rff.fit", n=int(np.asarray(points).shape[0]),
+                      features=cfg.rff_features):
+            self.state = flash_rff.fit(
+                points, h, n_features=cfg.rff_features,
+                n_pilot=cfg.rff_pilot, groups=cfg.rff_groups,
+            )
+        obs.counter("rff.fits", "RFF tier fits (full featurization "
+                    "passes)").inc()
+
+    def serving(self, prep: "PreparedEstimator", snap=None):
+        """The tier's serving tensors, synced to ``snap`` if streaming."""
+        from repro.kernels import flash_rff
+
+        with self._lock:
+            if prep.stream is None:
+                if self.state is None:
+                    self._fit(prep.points, prep.h)
+                return self.state.serving()
+            if snap is None:
+                snap = prep.stream.ensure(self.cfg.staleness_budget)
+            if snap.ids is None:
+                return None
+            if self.state is None or snap.layout_epoch != self._epoch:
+                self._fit(snap.points, prep.h)
+            elif snap.gen != self._gen:
+                self._sync(flash_rff, snap)
+            if snap.gen != self._gen or snap.layout_epoch != self._epoch:
+                self._epoch = snap.layout_epoch
+                self._gen = snap.gen
+                self._ids = np.asarray(snap.ids, np.int64)
+                self._points = np.asarray(snap.points, np.float64)
+            return self.state.serving()
+
+    def _sync(self, flash_rff, snap) -> None:
+        """Fold the id/value diff between the last-synced snapshot and
+        ``snap`` into the accumulators.  Live ids are monotone, so the
+        diff is two sorted-set operations; sd-kde's incremental debias
+        also *shifts* surviving rows, which the value compare catches
+        (shifted row = evict old coords + append new ones)."""
+        ids = np.asarray(snap.ids, np.int64)
+        pts = np.asarray(snap.points, np.float64)
+        old_ids, old_pts = self._ids, self._points
+        keep_new = np.isin(ids, old_ids)
+        keep_old = np.isin(old_ids, ids)
+        added = [pts[~keep_new]]
+        removed = [old_pts[~keep_old]]
+        moved = np.any(pts[keep_new] != old_pts[keep_old], axis=1)
+        if moved.any():
+            added.append(pts[keep_new][moved])
+            removed.append(old_pts[keep_old][moved])
+        flash_rff.update(self.state,
+                         added=np.concatenate(added),
+                         removed=np.concatenate(removed))
+        obs.counter("rff.incremental_syncs",
+                    "RFF feature-sum delta updates across stream "
+                    "generations").inc()
 
 
 class EstimatorRegistry:
@@ -155,6 +246,16 @@ class EstimatorRegistry:
                 "ServeConfig(stream=True) to append/evict points)"
             )
         return prep.stream
+
+    def rff_serving(self, prep: PreparedEstimator, snap=None):
+        """The RFF fast tier's serving tensors for one estimator, or None
+        when the tier is disabled/unsupported.  Lazy under
+        ``config.rff == "auto"``: the first cascade-routed request pays
+        the one-time featurization, everything after reuses it until the
+        generation moves."""
+        if prep.rff is None:
+            return None
+        return prep.rff.serving(prep, snap=snap)
 
     def append(self, key: str, xs):
         """Fold new train points into a streaming estimator — the O(n·b·d)
@@ -222,6 +323,8 @@ class EstimatorRegistry:
             plan=plan_obj,
         )
 
+        self._attach_rff(prep, cfg)
+
         if cfg.backend == "pallas":
             from repro.kernels import ops
 
@@ -229,8 +332,8 @@ class EstimatorRegistry:
             clustered = ops.resolve_prune(
                 cfg.prune, n, prep.block_n
             ) is not None
-            prep._columns[cfg.precision] = ops.prepare_train_columns(
-                points, block_n=prep.block_n, precision=cfg.precision,
+            prep._columns[cfg.exact_precision] = ops.prepare_train_columns(
+                points, block_n=prep.block_n, precision=cfg.exact_precision,
                 clustered=clustered,
             )
         elif cfg.backend == "ring":
@@ -239,6 +342,19 @@ class EstimatorRegistry:
             prep.mesh = ring.default_mesh()
             prep.x_sharded = ring.shard_points(points, prep.mesh, ("data",))
         return prep
+
+    @staticmethod
+    def _attach_rff(prep: PreparedEstimator, cfg: ServeConfig) -> None:
+        """Attach (and under ``rff="on"`` eagerly fit) the RFF fast tier
+        — amortized alongside the debias pass, once per generation."""
+        from repro.kernels import flash_rff
+
+        if cfg.rff == "off" or not flash_rff.supports(cfg.method,
+                                                      cfg.backend):
+            return
+        prep.rff = _RFFTier(cfg)
+        if cfg.rff == "on" and prep.stream is None:
+            prep.rff._fit(prep.points, prep.h)
 
     @staticmethod
     def _resolve_fit_blocks(cfg: ServeConfig, n: int, d: int):
@@ -289,6 +405,7 @@ class EstimatorRegistry:
             ),
         )
         prep.points = prep.stream.snapshot().points
+        self._attach_rff(prep, cfg)
         return prep
 
     def _debias(self, x: jnp.ndarray, h: float, cfg: ServeConfig):

@@ -63,7 +63,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -75,6 +75,8 @@ from repro.distributed.fault import Supervisor
 from repro.fault_injection import ChaosConfig, FaultInjector, InjectedFailure
 from repro.kernels import spatial
 from repro.plan.planner import TIER_ORDER, TIER_RTOL
+from repro.serve import cascade
+from repro.serve.api import RFF_TIER, Answer, QueryRequest, warn_legacy
 from repro.serve.config import ServeConfig
 from repro.serve.engine import ServeEngine
 from repro.serve.errors import (BadRequest, DeadlineExceeded, Degraded,
@@ -126,22 +128,10 @@ class ResilienceConfig:
             raise ValueError("max_retries >= 0, breaker_threshold >= 1")
 
 
-@dataclasses.dataclass
-class ResilientAnswer:
-    """Densities plus the provenance a resilient caller needs."""
-
-    densities: jnp.ndarray
-    degraded: bool = False
-    shed: bool = False
-    precision: str = "f32"
-    rel_err_bound: float = 0.0           # max over the batch (certified)
-    rel_err_bounds: Optional[np.ndarray] = None   # per query, degraded only
-    live_shards: Tuple[int, ...] = ()
-    missing_shards: Tuple[int, ...] = ()
-    retries: int = 0
-    hedges: int = 0
-    hedge_wins: int = 0
-    latency_s: float = 0.0
+# The resilient layer returns the same typed Answer as everything else
+# (serve/api.py) — its ``densities``/``precision`` properties keep the
+# old field names alive; the old class name stays as an alias.
+ResilientAnswer = Answer
 
 
 class CircuitBreaker:
@@ -209,6 +199,11 @@ class _ShardTable:
     shard_meta: List[spatial.TileMeta]   # per-shard certificate geometry
     engines: List[List[ServeEngine]]     # [shard][replica]
     skeys: List[str]
+    # full-set RFF fast tier (lazy; the pre-shard cascade serves from it
+    # and only escalated rows fan out to the shards).  Holding the fit
+    # registry keeps the debiased full set alive for the lazy fit.
+    rff_prep: object = None
+    rff_reg: object = None
 
     @property
     def n_shards(self) -> int:
@@ -329,6 +324,11 @@ class ResilientEngine:
             norm_c=gaussian_norm_const(d, 1.0) * prep.h ** d,
             shard_n=shard_n, shard_meta=shard_meta, engines=engines,
             skeys=skeys,
+            # the RFF tier is fit on the FULL debiased set (the registry
+            # attached it during fit_reg.fit) — the cascade answers whole
+            # queries before any shard is touched, so it must see the
+            # same estimator the recombined shards serve
+            rff_prep=prep, rff_reg=fit_reg,
         )
         self._tables[key] = table
         if self.supervisor is None:
@@ -351,115 +351,242 @@ class ResilientEngine:
 
     # -- query path -------------------------------------------------------
 
-    def query(self, key: str, y: jnp.ndarray, *,
+    def query(self, request, y: Optional[jnp.ndarray] = None, *,
               precision: Optional[str] = None,
               deadline_ms: Optional[float] = None,
-              allow_degraded: Optional[bool] = None) -> ResilientAnswer:
-        """Densities for one request under the full dispatch policy."""
-        table = self._tables.get(key)
+              allow_degraded: Optional[bool] = None) -> Answer:
+        """Densities for one request under the full dispatch policy.
+
+        Typed API: pass a :class:`~repro.serve.api.QueryRequest` —
+        ``deadline_s`` is relative seconds, ``accuracy_target`` engages
+        the pre-shard RFF cascade (whole rows answered from the full-set
+        fast tier never touch a shard; only escalated rows fan out), and
+        ``allow_degraded`` overrides the engine default.  Returns an
+        :class:`~repro.serve.api.Answer`; degraded answers compose per
+        row — fast-tier rows keep their RFF band, escalated rows carry
+        the degraded certificate.
+
+        Legacy API (deprecated): ``query(key, y, precision=,
+        deadline_ms=, allow_degraded=)`` — exact shard dispatch only,
+        as before the typed API existed (the returned Answer's
+        ``densities``/``precision`` properties keep old field names
+        alive).
+        """
+        if isinstance(request, QueryRequest):
+            if y is not None or precision is not None \
+                    or deadline_ms is not None or allow_degraded is not None:
+                raise BadRequest(
+                    "pass either a QueryRequest or the legacy "
+                    "(key, y, ...) arguments, not both")
+            return self._query_request(request, legacy=False)
+        warn_legacy("ResilientEngine.query(key, y, ...)",
+                    "ResilientEngine.query(QueryRequest(...)) -> Answer")
+        req = QueryRequest(
+            key=request, points=y, precision=precision,
+            deadline_s=(deadline_ms / 1e3 if deadline_ms is not None
+                        else None),
+            allow_degraded=allow_degraded)
+        return self._query_request(req, legacy=True)
+
+    def _query_request(self, req: QueryRequest, *, legacy: bool) -> Answer:
+        table = self._tables.get(req.key)
         if table is None:
             raise UnknownKey(
-                f"estimator {key!r} not registered with the resilient "
+                f"estimator {req.key!r} not registered with the resilient "
                 f"engine (have {list(self._tables)})"
             )
-        y = jnp.atleast_2d(jnp.asarray(y, jnp.float32))
+        y = jnp.atleast_2d(jnp.asarray(req.points, jnp.float32))
         if y.shape[0] == 0 or y.shape[-1] != table.d:
             raise BadRequest(
                 f"query batch {tuple(y.shape)} does not match registered "
                 f"dimensionality d={table.d} (or is empty)"
             )
-        if allow_degraded is None:
-            allow_degraded = self.rcfg.allow_degraded
+        allow_degraded = (req.allow_degraded
+                          if req.allow_degraded is not None
+                          else self.rcfg.allow_degraded)
         if self.injector is not None:
             self.injector.begin_request()
         with self._lock:
             self._requests += 1
-            req = self._requests
+            req_no = self._requests
             shed = self._shed_left > 0
             if shed:
                 self._shed_left -= 1
-        tier = precision or self.config.precision
-        if shed and precision is None:
+        pin = req.precision
+        tier = pin or self.config.precision
+        if shed and pin is None:
             tier = _cheapest_tier(self.rcfg.shed_accuracy)
             self.stats["shed"] += 1
             obs.counter("resilience.shed",
                         "requests served at a downgraded tier").inc()
         t0 = self._clock()
-        deadline = t0 + (deadline_ms if deadline_ms is not None
-                         else self.rcfg.deadline_ms) / 1e3
+        deadline = t0 + (req.deadline_s if req.deadline_s is not None
+                         else self.rcfg.deadline_ms / 1e3)
         self._refresh_health(table)
-        self._maybe_probe(table, req)
+        self._maybe_probe(table, req_no)
+
+        target = None
+        if not legacy:
+            target = (req.accuracy_target
+                      if req.accuracy_target is not None
+                      else self.config.accuracy_target)
+        m = int(y.shape[0])
+        pinned = tier == RFF_TIER
+        p = band = None
+        esc = np.ones(m, bool)
+        if pinned or (not legacy and pin is None and target is not None):
+            serving = self._rff_serving(table)
+            if serving is None and pinned:
+                raise BadRequest(
+                    f"precision='rff' pinned but the RFF tier is "
+                    f"unavailable for method={self.config.method!r} "
+                    f"(rff={self.config.rff!r})")
+            if serving is not None:
+                bucket = table.engines[0][0].config.bucket_for(m)
+                p, band = cascade.evaluate(self.config, serving, y, bucket)
+                esc = np.zeros(m, bool) if pinned else band > target
+                obs.counter("serve.cascade_hits",
+                            "query rows answered at the RFF fast "
+                            "tier").inc(int(m - esc.sum()))
+                if esc.any():
+                    obs.counter("serve.cascade_escalations",
+                                "query rows escalated to the exact "
+                                "tier").inc(int(esc.sum()))
+        exact_tier = "f32" if tier == RFF_TIER else tier
 
         counters = {"retries": 0, "hedges": 0, "hedge_wins": 0}
-        results: List[Optional[jnp.ndarray]] = []
-        sp = obs.span("resilience.request", key=key, rows=int(y.shape[0]),
+        sub = None
+        sp = obs.span("resilience.request", key=req.key, rows=m,
                       tier=tier, shed=shed)
         with sp:
-            for s in range(table.n_shards):
-                results.append(
-                    self._shard_query(table, s, y, deadline, tier, counters)
-                )
-            missing = tuple(s for s, r in enumerate(results) if r is None)
-            live = tuple(s for s, r in enumerate(results) if r is not None)
-            sp.set(missing=len(missing), retries=counters["retries"],
-                   hedges=counters["hedges"])
-            self.stats["requests"] += 1
-            self.stats["retries"] += counters["retries"]
-            self.stats["hedges"] += counters["hedges"]
-            self.stats["hedge_wins"] += counters["hedge_wins"]
-            obs.counter("resilience.requests", "resilient requests").inc()
-            if counters["retries"]:
-                obs.counter("resilience.retries",
-                            "shard dispatch retries").inc(counters["retries"])
+            if p is not None:
+                sp.set(cascade=True, hits=int(m - esc.sum()))
+            if esc.any():
+                idx = np.flatnonzero(esc)
+                y_esc = (y if esc.all()
+                         else jnp.asarray(np.asarray(y)[idx]))
+                sub = self._dispatch_shards(table, y_esc, exact_tier,
+                                            deadline, t0, shed,
+                                            allow_degraded, counters, sp)
+            else:
+                # the whole batch resolved at the fast tier: no shard was
+                # touched, but the request still counts as served
+                self.stats["requests"] += 1
+                obs.counter("resilience.requests",
+                            "resilient requests").inc()
+                self._note_done(t0, m, deadline_hit=False)
 
-            if not missing:
-                dens = sum(
-                    (table.shard_n[s] / table.n_tot) * results[s]
-                    for s in live
-                )
-                self._note_done(t0, y.shape[0], deadline_hit=False)
-                return ResilientAnswer(
-                    densities=dens, precision=tier, shed=shed,
-                    live_shards=live, latency_s=self._clock() - t0,
-                    **counters,
-                )
+        if p is None:
+            sub.latency_s = self._clock() - t0
+            return sub
+        value = p.copy()
+        bounds = band.copy()
+        hits = int(m - esc.sum())
+        if sub is not None:
+            idx = np.flatnonzero(esc)
+            value[idx] = np.asarray(sub.value, np.float64)
+            bounds[idx] = (sub.rel_err_bounds
+                           if sub.degraded and sub.rel_err_bounds is not None
+                           else cascade.exact_bound(exact_tier,
+                                                    self.config.prune))
+        path = (RFF_TIER,) if sub is None else (RFF_TIER, exact_tier)
+        return Answer(
+            value=jnp.asarray(value, jnp.float32), key=req.key,
+            tier=path[-1], path=path,
+            rel_err_bound=float(bounds.max()) if m else 0.0,
+            rel_err_bounds=bounds, rff_hits=hits,
+            escalated=int(esc.sum()),
+            degraded=bool(sub.degraded) if sub is not None else False,
+            shed=shed,
+            live_shards=sub.live_shards if sub is not None else (),
+            missing_shards=sub.missing_shards if sub is not None else (),
+            retries=counters["retries"], hedges=counters["hedges"],
+            hedge_wins=counters["hedge_wins"],
+            latency_s=self._clock() - t0,
+        )
 
-            if live and allow_degraded:
-                ans = self._degraded_answer(table, y, results, live,
-                                            missing, tier, shed, counters)
-                ans.latency_s = self._clock() - t0
-                sp.set(degraded=True, rel_err_bound=ans.rel_err_bound)
-                if ans.rel_err_bound <= self.rcfg.degraded_accuracy:
-                    self.stats["degraded"] += 1
-                    obs.counter("resilience.degraded",
-                                "certified partial-shard answers").inc()
-                    obs.histogram("resilience.degraded_bound",
-                                  "certified rel-err bound of degraded "
-                                  "answers", lo=1e-6, hi=1e2).observe(
-                        max(ans.rel_err_bound, 1e-6))
-                    self._note_done(t0, y.shape[0], deadline_hit=False)
-                    return ans
-                self._drop(key, "degraded_uncertifiable")
-                raise Degraded(
-                    f"partial answer from shards {live} has certified "
-                    f"rel-err bound {ans.rel_err_bound:.3g} > target "
-                    f"{self.rcfg.degraded_accuracy:.3g}",
-                    bound=ans.rel_err_bound,
-                    target=self.rcfg.degraded_accuracy,
-                )
+    def _rff_serving(self, table: _ShardTable):
+        """The full-set RFF serving tensors, or None when the tier is off
+        or unsupported (lazy fit happens inside the registry)."""
+        if table.rff_prep is None or table.rff_prep.rff is None:
+            return None
+        return table.rff_reg.rff_serving(table.rff_prep)
 
-            timed_out = self._clock() >= deadline
-            self._note_done(t0, y.shape[0], deadline_hit=timed_out)
-            self._drop(key, "deadline" if timed_out else "no_live_shards")
-            if timed_out:
-                raise DeadlineExceeded(
-                    f"deadline expired with shards {missing} unanswered "
-                    f"(retries={counters['retries']})"
-                )
-            raise Overloaded(
-                f"no live replica for shards {missing} "
-                f"(fenced={self.supervisor.fenced()})"
+    def _dispatch_shards(self, table: _ShardTable, y, tier: str,
+                         deadline: float, t0: float, shed: bool,
+                         allow_degraded: bool, counters, sp) -> Answer:
+        """Fan the (sub)batch out to every shard under the dispatch
+        policy; recombine, or certify a degraded partial answer.  Raises
+        the typed errors when neither is possible."""
+        m = int(y.shape[0])
+        results: List[Optional[jnp.ndarray]] = []
+        for s in range(table.n_shards):
+            results.append(
+                self._shard_query(table, s, y, deadline, tier, counters)
             )
+        missing = tuple(s for s, r in enumerate(results) if r is None)
+        live = tuple(s for s, r in enumerate(results) if r is not None)
+        sp.set(missing=len(missing), retries=counters["retries"],
+               hedges=counters["hedges"])
+        self.stats["requests"] += 1
+        self.stats["retries"] += counters["retries"]
+        self.stats["hedges"] += counters["hedges"]
+        self.stats["hedge_wins"] += counters["hedge_wins"]
+        obs.counter("resilience.requests", "resilient requests").inc()
+        if counters["retries"]:
+            obs.counter("resilience.retries",
+                        "shard dispatch retries").inc(counters["retries"])
+
+        if not missing:
+            dens = sum(
+                (table.shard_n[s] / table.n_tot) * results[s]
+                for s in live
+            )
+            self._note_done(t0, m, deadline_hit=False)
+            b = cascade.exact_bound(tier, self.config.prune)
+            return Answer(
+                value=dens, key=table.key, tier=tier, path=(tier,),
+                rel_err_bound=b, rel_err_bounds=np.full(m, b),
+                shed=shed, live_shards=live,
+                latency_s=self._clock() - t0, **counters,
+            )
+
+        if live and allow_degraded:
+            ans = self._degraded_answer(table, y, results, live,
+                                        missing, tier, shed, counters)
+            ans.latency_s = self._clock() - t0
+            sp.set(degraded=True, rel_err_bound=ans.rel_err_bound)
+            if ans.rel_err_bound <= self.rcfg.degraded_accuracy:
+                self.stats["degraded"] += 1
+                obs.counter("resilience.degraded",
+                            "certified partial-shard answers").inc()
+                obs.histogram("resilience.degraded_bound",
+                              "certified rel-err bound of degraded "
+                              "answers", lo=1e-6, hi=1e2).observe(
+                    max(ans.rel_err_bound, 1e-6))
+                self._note_done(t0, m, deadline_hit=False)
+                return ans
+            self._drop(table.key, "degraded_uncertifiable")
+            raise Degraded(
+                f"partial answer from shards {live} has certified "
+                f"rel-err bound {ans.rel_err_bound:.3g} > target "
+                f"{self.rcfg.degraded_accuracy:.3g}",
+                bound=ans.rel_err_bound,
+                target=self.rcfg.degraded_accuracy,
+            )
+
+        timed_out = self._clock() >= deadline
+        self._note_done(t0, m, deadline_hit=timed_out)
+        self._drop(table.key, "deadline" if timed_out else "no_live_shards")
+        if timed_out:
+            raise DeadlineExceeded(
+                f"deadline expired with shards {missing} unanswered "
+                f"(retries={counters['retries']})"
+            )
+        raise Overloaded(
+            f"no live replica for shards {missing} "
+            f"(fenced={self.supervisor.fenced()})"
+        )
 
     # -- per-shard dispatch ----------------------------------------------
 
@@ -640,8 +767,8 @@ class ResilientEngine:
             ctx = (self.injector.scope(s, r) if self.injector is not None
                    else _null_ctx())
             with ctx:
-                dens = table.engines[s][r].query(
-                    table.skeys[s], y, precision=tier)
+                dens = table.engines[s][r].query(QueryRequest(
+                    key=table.skeys[s], points=y, precision=tier)).value
             return self._clock() - t0, dens
         finally:
             lock.release()
@@ -692,8 +819,9 @@ class ResilientEngine:
                              np.abs(f_hat - hi) / hi)
         rel = np.where(lo > 0, rel, np.inf)
         dens = jnp.asarray(f_hat, jnp.float32)
-        return ResilientAnswer(
-            densities=dens, degraded=True, shed=shed, precision=tier,
+        return Answer(
+            value=dens, key=table.key, degraded=True, shed=shed,
+            tier=tier, path=(tier,),
             rel_err_bound=float(np.max(rel)) if rel.size else 0.0,
             rel_err_bounds=rel, live_shards=live, missing_shards=missing,
             **counters,
@@ -745,7 +873,7 @@ class ResilientEngine:
         probe = jnp.zeros((1, table.d), jnp.float32)
         try:
             _, dens = self._attempt(table, s, r, probe,
-                                    self.config.precision,
+                                    self.config.exact_precision,
                                     self._clock() + 1.0)
             if not np.isfinite(np.asarray(dens)).all():
                 return

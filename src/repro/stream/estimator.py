@@ -68,6 +68,10 @@ class StreamSnapshot(NamedTuple):
     columns: Dict[str, ops.TrainColumns]
     affected_tiles: int               # tiles refreshed by this flush
     total_tiles: int
+    # live ids aligned with ``points`` rows (monotone; the RFF tier's
+    # incremental refit diffs consecutive snapshots by id to fold
+    # appends/evictions into its feature sums without a full refit)
+    ids: Optional[np.ndarray] = None
 
 
 class StreamingSDKDE:
@@ -398,7 +402,7 @@ class StreamingSDKDE:
             xp[:n] = x_sd
             return StreamSnapshot(
                 self.gen, self.layout_epoch, n, norm, jnp.asarray(x_sd),
-                jnp.asarray(xp), None, None, {}, 0, 0,
+                jnp.asarray(xp), None, None, {}, 0, 0, ids=self.ids,
             )
 
         reason = (self.policy.reason()
@@ -443,6 +447,7 @@ class StreamingSDKDE:
         return StreamSnapshot(
             self.gen, self.layout_epoch, n, norm, jnp.asarray(x_sd),
             xp_j, real_j, self._index, cols, len(tiles), total_tiles,
+            ids=self.ids,
         )
 
     def _publish_rebuilt(self, x_sd: np.ndarray, norm: float,
@@ -468,7 +473,7 @@ class StreamingSDKDE:
         return StreamSnapshot(
             self.gen, self.layout_epoch, x_sd.shape[0], norm,
             jnp.asarray(x_sd), xp_j, real_j, self._index, cols,
-            total_tiles, total_tiles,
+            total_tiles, total_tiles, ids=self.ids,
         )
 
     def _rebuild_layout(self, x_sd: np.ndarray) -> None:

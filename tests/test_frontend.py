@@ -21,8 +21,9 @@ from repro import fault_injection
 from repro.fault_injection import ChaosConfig, FaultInjector
 from repro.serve import (AdmissionStateMachine, AimdController,
                          AsyncFrontend, DeadlineExceeded, FrontendConfig,
-                         Overloaded, ResilienceConfig, ResilientEngine,
-                         ServeConfig, ServeEngine, TokenBucket)
+                         Overloaded, QueryRequest, ResilienceConfig,
+                         ResilientEngine, ServeConfig, ServeEngine,
+                         TokenBucket)
 from repro.serve.frontend import ACCEPTING, BACKPRESSURE, DRAINING, SHEDDING
 
 D, H = 4, 0.5
@@ -50,6 +51,10 @@ def _pump_cfg(**kw):
     return FrontendConfig(**base)
 
 
+def _req(key, y, **kw):
+    return QueryRequest(key=key, points=y, **kw)
+
+
 class FakeClock:
     def __init__(self, t=0.0):
         self.t = t
@@ -71,13 +76,14 @@ def test_fused_batch_matches_direct_queries(data):
     eng = _engine(x)
     ys = [y[:3], y[3:10], y[10:15], y[15:16]]
     with AsyncFrontend(eng, _pump_cfg()) as fe:
-        futs = [fe.submit("ds", q) for q in ys]
+        futs = [fe.submit(_req("ds", q)) for q in ys]
         assert fe.pump() == 1              # all four fused into one batch
         for q, f in zip(ys, futs):
             ans = f.result(timeout=5)
             assert ans.batch_requests == len(ys)
             np.testing.assert_allclose(
-                np.asarray(ans.densities), np.asarray(eng.query("ds", q)),
+                np.asarray(ans.value),
+                np.asarray(eng.query(_req("ds", q)).value),
                 rtol=1e-5)
         assert fe.unaccounted() == 0
 
@@ -92,13 +98,13 @@ def test_tier_equivalence_through_frontend(data, tier, rtol):
     eng = _engine(x, backend="pallas", interpret=True, block_m=8,
                   block_n=128, block=128)
     with AsyncFrontend(eng, _pump_cfg()) as fe:
-        futs = [fe.submit("ds", y[:12], precision=tier),
-                fe.submit("ds", y[12:20], precision=tier)]
+        futs = [fe.submit(_req("ds", y[:12], precision=tier)),
+                fe.submit(_req("ds", y[12:20], precision=tier))]
         fe.pump()
-        want = [eng.query("ds", y[:12], precision=tier),
-                eng.query("ds", y[12:20], precision=tier)]
+        want = [eng.query(_req("ds", y[:12], precision=tier)).value,
+                eng.query(_req("ds", y[12:20], precision=tier)).value]
         for f, w in zip(futs, want):
-            np.testing.assert_allclose(np.asarray(f.result().densities),
+            np.testing.assert_allclose(np.asarray(f.result().value),
                                        np.asarray(w), rtol=rtol)
 
 
@@ -110,15 +116,16 @@ def test_streaming_generation_flip_through_frontend(data):
                   block_n=64, stream=True, staleness_budget=0,
                   min_batch=16, max_batch=128)
     with AsyncFrontend(eng, _pump_cfg()) as fe:
-        f0 = fe.submit("ds", y[:8])
+        f0 = fe.submit(_req("ds", y[:8]))
         fe.pump()
-        before = np.asarray(f0.result().densities)
+        before = np.asarray(f0.result().value)
         eng.registry.append("ds", xa)          # generation flip
-        f1 = fe.submit("ds", y[:8])
+        f1 = fe.submit(_req("ds", y[:8]))
         fe.pump()
-        after = np.asarray(f1.result().densities)
+        after = np.asarray(f1.result().value)
         np.testing.assert_allclose(
-            after, np.asarray(eng.query("ds", y[:8])), rtol=1e-5)
+            after, np.asarray(eng.query(_req("ds", y[:8])).value),
+            rtol=1e-5)
         assert not np.allclose(after, before)  # new mass actually counted
 
 
@@ -128,8 +135,8 @@ def test_mixed_precision_requests_do_not_fuse(data):
     x, _, y = data
     eng = _engine(x)
     with AsyncFrontend(eng, _pump_cfg()) as fe:
-        fa = fe.submit("ds", y[:4], precision="f32")
-        fb = fe.submit("ds", y[4:8], precision="bf16")
+        fa = fe.submit(_req("ds", y[:4], precision="f32"))
+        fb = fe.submit(_req("ds", y[4:8], precision="bf16"))
         assert fe.pump() == 2
         assert fa.result().tier == "f32" and fb.result().tier == "bf16"
 
@@ -144,9 +151,9 @@ def test_queue_full_sheds_typed(data):
     eng = _engine(x)
     fe = AsyncFrontend(eng, _pump_cfg(max_queue=4, rate=1e5, burst=1e4))
     for _ in range(4):
-        fe.submit("ds", y[:2])
+        fe.submit(_req("ds", y[:2]))
     with pytest.raises(Overloaded) as ei:
-        fe.submit("ds", y[:2])
+        fe.submit(_req("ds", y[:2]))
     assert ei.value.reason == "queue_full"
     fe.pump()
     assert fe.unaccounted() == 0
@@ -157,13 +164,13 @@ def test_draining_rejects_new_but_serves_queued(data):
     x, _, y = data
     eng = _engine(x)
     fe = AsyncFrontend(eng, _pump_cfg())
-    f0 = fe.submit("ds", y[:4])
+    f0 = fe.submit(_req("ds", y[:4]))
     fe.sm.drain()
     with pytest.raises(Overloaded) as ei:
-        fe.submit("ds", y[:4])
+        fe.submit(_req("ds", y[:4]))
     assert ei.value.reason == "draining"
     assert fe.drain(timeout=5)             # pump-mode drain serves f0
-    assert f0.result().densities.shape == (4,)
+    assert f0.result().value.shape == (4,)
     assert fe.state == DRAINING
 
 
@@ -175,21 +182,22 @@ def test_injected_failure_retries_then_answers(data):
     calls = {"n": 0}
     real_query_many = eng.query_many
 
-    def flaky(key, batches, **kw):
+    def flaky(reqs, **kw):
         calls["n"] += 1
         if calls["n"] == 1:
             raise fault_injection.InjectedFailure("slow_shard",
                                                   point="serve.dispatch")
-        return real_query_many(key, batches, **kw)
+        return real_query_many(reqs, **kw)
 
     eng.query_many = flaky
     with AsyncFrontend(eng, _pump_cfg(max_retries=2)) as fe:
-        f = fe.submit("ds", y[:5])
+        f = fe.submit(_req("ds", y[:5]))
         fe.pump()                           # fails, requeues
         fe.pump()                           # retry succeeds
-        np.testing.assert_allclose(np.asarray(f.result().densities),
-                                   np.asarray(eng.query("ds", y[:5])),
-                                   rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(f.result().value),
+            np.asarray(eng.query(_req("ds", y[:5])).value),
+            rtol=1e-5)
         assert fe.stats["retries"] == 1 and fe.unaccounted() == 0
 
 
@@ -197,13 +205,13 @@ def test_retries_exhausted_is_typed_overloaded(data):
     x, _, y = data
     eng = _engine(x)
 
-    def always_fails(key, batches, **kw):
+    def always_fails(reqs, **kw):
         raise fault_injection.InjectedFailure("slow_shard",
                                               point="serve.dispatch")
 
     eng.query_many = always_fails
     with AsyncFrontend(eng, _pump_cfg(max_retries=1)) as fe:
-        f = fe.submit("ds", y[:5])
+        f = fe.submit(_req("ds", y[:5]))
         for _ in range(3):
             fe.pump()
         with pytest.raises(Overloaded) as ei:
@@ -218,12 +226,12 @@ def test_real_bug_propagates_to_caller_not_retried(data):
     x, _, y = data
     eng = _engine(x)
 
-    def broken(key, batches, **kw):
+    def broken(reqs, **kw):
         raise RuntimeError("genuine bug")
 
     eng.query_many = broken
     with AsyncFrontend(eng, _pump_cfg()) as fe:
-        f = fe.submit("ds", y[:5])
+        f = fe.submit(_req("ds", y[:5]))
         fe.pump()
         with pytest.raises(RuntimeError, match="genuine bug"):
             f.result(timeout=5)
@@ -239,7 +247,8 @@ def test_expired_in_queue_is_typed_deadline(data):
     x, _, y = data
     eng = _engine(x)
     fe = AsyncFrontend(eng, _pump_cfg())
-    f = fe.submit("ds", y[:4], deadline_s=-1.0)    # born expired
+    f = fe.submit(_req("ds", y[:4], deadline_s=1e-9))   # born ~expired
+    time.sleep(0.001)
     fe.pump()
     with pytest.raises(DeadlineExceeded):
         f.result(timeout=5)
@@ -257,30 +266,31 @@ def test_edf_dequeue_order(data):
     order = []
     real = eng.query_many
 
-    def spy(key, batches, **kw):
-        order.append(key)
-        return real(key, batches, **kw)
+    def spy(reqs, **kw):
+        order.append(reqs[0].key)
+        return real(reqs, **kw)
 
     eng.query_many = spy
-    fe.submit("b", y[:2], deadline_s=20.0)
-    fe.submit("c", y[:2], deadline_s=30.0)
-    fe.submit("a", y[:2], deadline_s=10.0)
+    fe.submit(_req("b", y[:2], deadline_s=20.0))
+    fe.submit(_req("c", y[:2], deadline_s=30.0))
+    fe.submit(_req("a", y[:2], deadline_s=10.0))
     fe.pump()
     assert order == ["a", "b", "c"]
 
 
-def test_engine_deadline_s_enforced(data):
-    """Satellite: the PLAIN engine honors per-request deadlines now."""
+def test_engine_deadline_enforced(data):
+    """Satellite: the PLAIN engine honors per-request deadlines now —
+    relative seconds on the typed request."""
     x, _, y = data
     eng = _engine(x)
     with pytest.raises(DeadlineExceeded):
-        eng.query("ds", y[:4], deadline_s=time.monotonic() - 1.0)
+        eng.query(_req("ds", y[:4], deadline_s=1e-9))
     with pytest.raises(DeadlineExceeded):
-        eng.query_many("ds", [y[:4]], deadline_s=time.monotonic() - 1.0)
+        eng.query_many([_req("ds", y[:4], deadline_s=1e-9)])
     # a generous deadline changes nothing
-    ok = eng.query("ds", y[:4], deadline_s=time.monotonic() + 60.0)
+    ok = eng.query(_req("ds", y[:4], deadline_s=60.0)).value
     np.testing.assert_allclose(np.asarray(ok),
-                               np.asarray(eng.query("ds", y[:4])),
+                               np.asarray(eng.query(_req("ds", y[:4])).value),
                                rtol=1e-7)
 
 
@@ -365,8 +375,8 @@ def test_frontend_brownout_ladder_under_pressure(data):
     cfg = _pump_cfg(max_queue=8, backpressure_frac=0.25, shed_frac=0.625,
                     rate=1e5, burst=1e4, default_deadline_ms=60_000.0)
     fe = AsyncFrontend(eng, cfg)
-    futs = [fe.submit("ds", y[i:i + 1]) for i in range(6)]
-    pinned = fe.submit("ds", y[6:7], precision="f32")
+    futs = [fe.submit(_req("ds", y[i:i + 1])) for i in range(6)]
+    pinned = fe.submit(_req("ds", y[6:7], precision="f32"))
     assert fe.state == SHEDDING
     fe.pump()
     shed = futs[0].result(timeout=5)
@@ -386,12 +396,12 @@ def test_resilient_frontend_multiworker_equivalence(data):
                          deadline_ms=30_000.0))
     reng.register("ds", x, h=H)
     try:
-        want = np.asarray(reng.query("ds", y[:6]).densities)
+        want = np.asarray(reng.query(_req("ds", y[:6])).value)
         with AsyncFrontend(reng, FrontendConfig(workers=2)) as fe:
-            futs = [fe.submit("ds", y[:6]) for _ in range(8)]
+            futs = [fe.submit(_req("ds", y[:6])) for _ in range(8)]
             for f in futs:
                 np.testing.assert_allclose(
-                    np.asarray(f.result(timeout=30).densities), want,
+                    np.asarray(f.result(timeout=30).value), want,
                     rtol=1e-5)
             assert fe.unaccounted() == 0
     finally:
@@ -424,16 +434,16 @@ def test_drain_implies_every_future_resolved(data):
     eng = _engine(x)
     real = eng.query_many
 
-    def slow(key, ys, **kw):
+    def slow(reqs, **kw):
         time.sleep(0.005)                 # widen the would-be race window
-        return real(key, ys, **kw)
+        return real(reqs, **kw)
 
     eng.query_many = slow
     for _ in range(20):
         with AsyncFrontend(eng, FrontendConfig(
                 workers=1, batch_wait_ms=0.0,
                 default_deadline_ms=30_000.0)) as fe:
-            futs = [fe.submit("ds", y[:3]) for _ in range(4)]
+            futs = [fe.submit(_req("ds", y[:3])) for _ in range(4)]
             assert fe.drain(timeout=10.0)
             assert all(f.done() for f in futs)
             assert fe.unaccounted() == 0
@@ -450,7 +460,7 @@ def test_drain_covers_straggler_wait_window(data):
         with AsyncFrontend(eng, FrontendConfig(
                 workers=1, batch_wait_ms=100.0,
                 default_deadline_ms=30_000.0)) as fe:
-            f = fe.submit("ds", y[:3])
+            f = fe.submit(_req("ds", y[:3]))
             time.sleep(0.02)              # let the worker enter the wait
             assert fe.drain(timeout=10.0)
             assert f.done()
@@ -482,10 +492,10 @@ def test_burst_mode_injects_synthetic_queue_pressure(data):
     try:
         fe = AsyncFrontend(eng, _pump_cfg(max_queue=16))
         inj.begin_request()
-        f = fe.submit("ds", y[:2])
+        f = fe.submit(_req("ds", y[:2]))
         assert fe.stats["synthetic"] == 4
         fe.pump()
-        assert f.result(timeout=5).densities.shape == (2,)
+        assert f.result(timeout=5).value.shape == (2,)
         assert fe.unaccounted() == 0
     finally:
         fault_injection.install(None)

@@ -15,8 +15,13 @@ import pytest
 
 from repro import obs
 from repro.obs.metrics import Histogram, log_bucket_bounds
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 from repro.serve.stats import LatencyRecorder
+
+
+def _q(eng, key, y, **kw):
+    """One typed query, densities out."""
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
 
 D, H = 4, 0.5
 
@@ -206,7 +211,8 @@ def test_span_nesting_and_ordering_under_query_many(data):
     eng = ServeEngine(ServeConfig(backend="jnp", min_batch=16,
                                   max_batch=128))
     eng.register("t", x, h=H)
-    eng.query_many("t", [y[:5], y[:17], y[:3]])
+    eng.query_many([QueryRequest(key="t", points=q)
+                    for q in (y[:5], y[:17], y[:3])])
     ev = obs.trace_events()
     req = [e for e in ev if e["name"] == "serve.request"]
     disp = [e for e in ev if e["name"] == "serve.dispatch"]
@@ -223,7 +229,8 @@ def test_span_nesting_and_ordering_under_query_many(data):
     assert req[0]["ts_us"] <= disp[0]["ts_us"] <= buck[0]["ts_us"]
     assert buck[0]["dur_us"] <= req[0]["dur_us"]
     # a second identical dispatch reuses the executable
-    eng.query_many("t", [y[:5], y[:17], y[:3]])
+    eng.query_many([QueryRequest(key="t", points=q)
+                    for q in (y[:5], y[:17], y[:3])])
     last = obs.trace_events()[-3:]
     hit = [e for e in last if e["name"] == "serve.bucket"]
     assert hit and hit[0]["attrs"]["cache"] == "hit"
@@ -237,8 +244,8 @@ def test_engine_metrics_surface(data):
     eng = ServeEngine(ServeConfig(backend="jnp", min_batch=16,
                                   max_batch=128))
     eng.register("t", x, h=H)
-    eng.query("t", y[:9])
-    eng.query("t", y[:9])
+    _q(eng, "t", y[:9])
+    _q(eng, "t", y[:9])
     m = eng.metrics()
     assert m["latency"]["count"] == 2
     assert m["latency_hist"]["count"] == 2
@@ -275,10 +282,10 @@ def test_staleness_histogram_matches_summary(data):
     obs.registry.reset()
     eng = ServeEngine(_stream_cfg())
     eng.register("s", x[:128], h=H)
-    eng.query("s", y[:8])
+    _q(eng, "s", y[:8])
     for i in range(3):
         eng.registry.append("s", xa[i * 8:(i + 1) * 8])
-        eng.query("s", y[:8])
+        _q(eng, "s", y[:8])
     summ = eng.staleness_summary()
     hist = obs.histogram("serve.staleness_gen").snapshot()
     assert summ["count"] == hist["count"] >= 4
@@ -313,7 +320,7 @@ def test_streaming_soak_trace_reconstruction(data):
         if i % 2 == 0:
             eng.registry.append("soak", xa[(i // 2) * 8:(i // 2) * 8 + 8])
         m = int(rng.integers(3, 60))
-        eng.query("soak", y[:m])
+        _q(eng, "soak", y[:m])
     eng.registry.get("soak").stream.ensure(0)      # final flush
 
     ev = eng.trace_events()

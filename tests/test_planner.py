@@ -44,7 +44,12 @@ from repro.plan import (
     requests_from_docs,
     resolve_config,
 )
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
+
+
+def _q(eng, key, y, **kw):
+    """One typed query, densities out."""
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
 
 _REPO = Path(__file__).resolve().parents[1]
 _GOLDEN = load_golden(_REPO / "tests" / "golden_plans.json")
@@ -495,7 +500,7 @@ def test_engine_prewarm_builds_chosen_executable():
     assert prep.plan is not None
     assert len(eng.cache) == 1           # largest bucket built at register
     misses = eng.cache.misses
-    eng.query("warm", x[:64])
+    _q(eng, "warm", x[:64])
     assert eng.cache.misses == misses    # served by the prewarmed program
 
 
@@ -517,7 +522,7 @@ def test_dispatch_span_carries_plan_id():
         eng = ServeEngine(ServeConfig(plan="auto", min_batch=16,
                                       max_batch=64))
         prep = eng.register("traced", x)
-        eng.query("traced", x[:8])
+        _q(eng, "traced", x[:8])
         spans = [e for e in eng.trace_events()
                  if e.get("name") == "serve.dispatch"
                  and e.get("attrs", {}).get("key") == "traced"]

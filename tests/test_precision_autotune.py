@@ -42,6 +42,11 @@ SHAPES = [
 ]
 
 
+
+def _q(eng, key, y, **kw):
+    from repro.serve import QueryRequest
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
+
 def _data(n, m, d, seed=0):
     kx, ky = jax.random.split(jax.random.PRNGKey(seed))
     x = jax.random.normal(kx, (n, d), jnp.float32)
@@ -299,9 +304,9 @@ def test_serve_precision_override_and_per_tier_cache():
     assert isinstance(prep.block_m, int) and isinstance(prep.block_n, int)
     want = np.asarray(refkde.kde_eval(x, y, h, block=128))
 
-    _assert_tier(eng.query("ds", y), want, "bf16x2")
-    _assert_tier(eng.query("ds", y, precision="f32"), want, "f32")
-    _assert_tier(eng.query("ds", y, precision="bf16"), want, "bf16")
+    _assert_tier(_q(eng, "ds", y), want, "bf16x2")
+    _assert_tier(_q(eng, "ds", y, precision="f32"), want, "f32")
+    _assert_tier(_q(eng, "ds", y, precision="bf16"), want, "bf16")
     # one prepared-column set per tier, cached on the estimator
     assert sorted(prep._columns) == ["bf16", "bf16x2", "f32"]
     # bucket ladder respects the tuned row tile

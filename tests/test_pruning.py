@@ -24,6 +24,11 @@ import pytest
 from repro.kernels import autotune, ops, spatial
 from repro.kernels import precision as prec
 
+
+def _q(eng, key, y, **kw):
+    from repro.serve import QueryRequest
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
+
 TIERS = ("f32", "bf16", "bf16x2")
 
 
@@ -433,7 +438,7 @@ def test_serve_pruned_matches_reference():
                       min_batch=64, max_batch=512)
     eng = ServeEngine(cfg)
     prep = eng.register("clustered", x, h=0.4)
-    got = np.asarray(eng.query("clustered", y))
+    got = np.asarray(_q(eng, "clustered", y))
     want = np.asarray(refkde.sdkde_eval(x, y, 0.4, block=1024))
     np.testing.assert_allclose(got, want, rtol=1e-4,
                                atol=1e-6 * float(np.max(np.abs(want))))
@@ -457,8 +462,8 @@ def test_serve_prune_off_unchanged():
                                   prune="off", min_batch=32, max_batch=128))
     on.register("k", x, h=0.3)
     off.register("k", x, h=0.3)
-    np.testing.assert_allclose(np.asarray(on.query("k", y)),
-                               np.asarray(off.query("k", y)),
+    np.testing.assert_allclose(np.asarray(_q(on, "k", y)),
+                               np.asarray(_q(off, "k", y)),
                                rtol=1e-6, atol=1e-20)
 
 

@@ -1,0 +1,203 @@
+"""The typed query API (serve/api.py): round-trip equivalence with the
+legacy signatures, precedence, deprecation shims, and the shim lint.
+
+Round-trip: every layer (plain engine, resilient engine, async frontend)
+must answer a ``QueryRequest`` with exactly the densities its legacy
+signature returned (≤1e-5 relative).  The legacy calls in this file are
+the deliberately-kept shim exercises — each is marked ``legacy-api-ok``
+for the lint at the bottom, which fails on any *unmarked* legacy caller
+left in tests/benchmarks/examples.
+"""
+
+import re
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.serve import (AsyncFrontend, FrontendConfig, QueryRequest,
+                         ResilienceConfig, ResilientEngine, ServeConfig,
+                         ServeEngine)
+from repro.serve.engine import BadRequest
+
+D, H = 4, 0.5
+
+
+@pytest.fixture(scope="module")
+def data():
+    kx, ky = jax.random.split(jax.random.PRNGKey(11))
+    return (np.asarray(jax.random.normal(kx, (384, D)), np.float32),
+            np.asarray(jax.random.normal(ky, (40, D)), np.float32))
+
+
+def _engine(x, **kw):
+    base = dict(backend="jnp", method="sdkde", min_batch=8, max_batch=64)
+    base.update(kw)
+    eng = ServeEngine(ServeConfig(**base))
+    eng.register("ds", x, h=H)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# QueryRequest validation.
+# ---------------------------------------------------------------------------
+
+
+def test_request_validates_fields():
+    y = np.zeros((1, D), np.float32)
+    with pytest.raises(ValueError, match="non-empty"):
+        QueryRequest(key="", points=y)
+    with pytest.raises(ValueError, match="precision pin"):
+        QueryRequest(key="k", points=y, precision="f64")
+    with pytest.raises(ValueError, match="accuracy_target"):
+        QueryRequest(key="k", points=y, accuracy_target=0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        QueryRequest(key="k", points=y, deadline_s=-1.0)
+    # the RFF fast tier is a first-class pin
+    assert QueryRequest(key="k", points=y, precision="rff").precision == "rff"
+
+
+def test_mixing_typed_and_legacy_args_rejected(data):
+    x, y = data
+    eng = _engine(x)
+    with pytest.raises(BadRequest, match="not both"):
+        eng.query(QueryRequest(key="ds", points=y), y)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip equivalence: typed API == legacy shims, every layer.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_roundtrip_matches_legacy(data):
+    x, y = data
+    eng = _engine(x)
+    ans = eng.query(QueryRequest(key="ds", points=y))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = eng.query("ds", y)                      # legacy-api-ok
+    np.testing.assert_allclose(np.asarray(ans.value), np.asarray(legacy),
+                               rtol=1e-5)
+    assert ans.key == "ds" and ans.tier == "f32"
+    assert ans.path == ("f32",)
+    assert ans.rel_err_bound > 0.0                 # exact tier's rtol
+    assert ans.rff_hits == 0 and ans.escalated == 0
+
+
+def test_engine_query_many_roundtrip_matches_legacy(data):
+    x, y = data
+    eng = _engine(x)
+    parts = [y[:7], y[7:19], y[19:]]
+    answers = eng.query_many(
+        [QueryRequest(key="ds", points=p) for p in parts])
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = eng.query_many("ds", parts)             # legacy-api-ok
+    assert len(answers) == len(legacy) == len(parts)
+    for a, l in zip(answers, legacy):
+        np.testing.assert_allclose(np.asarray(a.value), np.asarray(l),
+                                   rtol=1e-5)
+        assert a.rel_err_bounds.shape == (np.asarray(l).shape[0],)
+
+
+def test_resilient_roundtrip_matches_legacy(data):
+    x, y = data
+    eng = ResilientEngine(ServeConfig(backend="jnp", method="sdkde",
+                                      min_batch=8, max_batch=64),
+                          ResilienceConfig(shards=2, replicas=2))
+    eng.register("ds", x, h=H)
+    ans = eng.query(QueryRequest(key="ds", points=y))
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = eng.query("ds", y)                      # legacy-api-ok
+    np.testing.assert_allclose(np.asarray(ans.value),
+                               np.asarray(legacy.value), rtol=1e-5)
+    assert not ans.degraded and ans.rel_err_bound > 0.0
+
+
+def test_frontend_roundtrip_matches_legacy(data):
+    x, y = data
+    eng = _engine(x)
+    with AsyncFrontend(eng, FrontendConfig(workers=0)) as fe:
+        fut = fe.submit(QueryRequest(key="ds", points=y, deadline_s=60.0))
+        fe.pump()
+        ans = fut.result(timeout=10)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            fut2 = fe.submit("ds", y, deadline_s=60.0)   # legacy-api-ok
+        fe.pump()
+        legacy = fut2.result(timeout=10)
+    np.testing.assert_allclose(np.asarray(ans.value),
+                               np.asarray(legacy.value), rtol=1e-5)
+    assert ans.batch_requests >= 1 and ans.latency_s >= 0.0
+
+
+def test_answer_compat_views(data):
+    x, y = data
+    eng = _engine(x)
+    ans = eng.query(QueryRequest(key="ds", points=y))
+    # migrating callers read .densities/.precision off any layer's answer
+    assert ans.densities is ans.value
+    assert ans.precision == ans.tier
+
+
+# ---------------------------------------------------------------------------
+# Precedence: request pin > explicit config > planner.
+# ---------------------------------------------------------------------------
+
+
+def test_request_pin_beats_explicit_config(data):
+    x, y = data
+    eng = _engine(x, backend="pallas", interpret=True, block_m=8,
+                  block_n=128, precision="bf16")
+    ans = eng.query(QueryRequest(key="ds", points=y, precision="f32"))
+    assert ans.tier == "f32"
+    want = eng.query(QueryRequest(key="ds", points=y))
+    assert want.tier == "bf16"                 # explicit config, unpinned
+
+
+def test_pin_override_of_plan_is_counted(data):
+    x, y = data
+    eng = _engine(x, backend="pallas", interpret=True, block_m=8,
+                  block_n=128, plan="auto", accuracy_target=1e-5)
+    prep = eng.registry.get("ds")
+    assert prep.plan is not None and prep.plan.precision == "f32"
+
+    def overrides():
+        m = obs.metrics_snapshot().get("serve.pin_overrides_plan")
+        return m["value"] if m else 0
+
+    before = overrides()
+    ans = eng.query(QueryRequest(key="ds", points=y, precision="bf16"))
+    assert ans.tier == "bf16"
+    after = overrides()
+    assert after == before + 1
+    # a pin that AGREES with the plan is not an override
+    eng.query(QueryRequest(key="ds", points=y, precision="f32"))
+    assert overrides() == after
+
+
+# ---------------------------------------------------------------------------
+# Deprecation-shim lint: no unmarked legacy callers left in-repo.
+# ---------------------------------------------------------------------------
+
+_LEGACY_CALL = re.compile(r"\.(query|query_many|submit)\(\s*[\"'fr]*[\"']")
+_MARKER = "legacy-api-ok"
+_SCAN_DIRS = ("tests", "benchmarks", "examples")
+
+
+def test_no_unmarked_legacy_callers():
+    """Every in-repo caller uses the typed API; deliberate shim exercises
+    carry the ``legacy-api-ok`` marker.  This is the CI lint the shims'
+    one-release deprecation window is enforced by."""
+    root = Path(__file__).resolve().parents[1]
+    offenders = []
+    for dirname in _SCAN_DIRS:
+        for path in sorted((root / dirname).rglob("*.py")):
+            for i, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                if _LEGACY_CALL.search(line) and _MARKER not in line:
+                    offenders.append(f"{path.relative_to(root)}:{i}: "
+                                     f"{line.strip()}")
+    assert not offenders, (
+        "legacy serve-API call signatures found (migrate to "
+        "QueryRequest/Answer or mark deliberate shim tests with "
+        "'# legacy-api-ok'):\n" + "\n".join(offenders))

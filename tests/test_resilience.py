@@ -13,6 +13,7 @@ from repro.fault_injection import ChaosConfig, ChaosEvent, FaultInjector
 from repro.kernels import spatial
 from repro.serve import (
     BadRequest,
+    QueryRequest,
     Degraded,
     DeadlineExceeded,
     Overloaded,
@@ -34,6 +35,10 @@ def data():
     return mix.sample(key, N), mix.sample(jax.random.fold_in(key, 1), 64)
 
 
+def _req(key, y, **kw):
+    return QueryRequest(key=key, points=y, **kw)
+
+
 def mk_engine(chaos=None, **rkw):
     cfg = ServeConfig(backend="jnp", method="sdkde",
                       min_batch=8, max_batch=32)
@@ -53,12 +58,13 @@ def test_sharded_answer_matches_full_reference(data):
         assert table.n_shards == 2 and table.n_replicas == 2
         assert sum(table.shard_n) == N
         y = pool[:24]
-        ans = eng.query("k", y)
+        ans = eng.query(_req("k", y))
         expect = np.asarray(ref.sdkde_eval(x, y, table.h, block=256))
         np.testing.assert_allclose(np.asarray(ans.densities), expect,
                                    rtol=1e-4)
         assert not ans.degraded and ans.live_shards == (0, 1)
-        assert ans.missing_shards == () and ans.rel_err_bound == 0.0
+        assert ans.missing_shards == ()
+        assert 0.0 < ans.rel_err_bound <= 1e-5   # f32 tier rtol
 
 
 # -- shard partitioning + certificates ----------------------------------------
@@ -108,7 +114,7 @@ def test_replica_kill_is_survived_exactly(data):
         expect = None
         for i in range(5):
             y = pool[8 * i:8 * i + 16]
-            ans = eng.query("k", y)
+            ans = eng.query(_req("k", y))
             assert not ans.degraded
             expect = np.asarray(ref.sdkde_eval(x, y, table.h, block=256))
             np.testing.assert_allclose(np.asarray(ans.densities), expect,
@@ -124,7 +130,7 @@ def test_nan_poison_never_reaches_caller(data):
     with mk_engine(chaos=chaos) as eng:
         eng.register("k", x, prewarm=False)
         for i in range(4):
-            ans = eng.query("k", pool[8 * i:8 * i + 8])
+            ans = eng.query(_req("k", pool[8 * i:8 * i + 8]))
             assert np.isfinite(np.asarray(ans.densities)).all()
             assert not ans.degraded
         assert eng.stats["dropped"] == 0
@@ -138,7 +144,7 @@ def test_compile_fail_opens_breaker(data):
                    breaker_cooldown_s=3600.0) as eng:
         eng.register("k", x, prewarm=False)
         for i in range(8):
-            ans = eng.query("k", pool[:8])
+            ans = eng.query(_req("k", pool[:8]))
             assert not ans.degraded
         states = eng.breaker_states()
         assert any(k.startswith("k/s0r0") and v == "open"
@@ -154,9 +160,9 @@ def test_hedge_wins_over_slow_replica(data):
         slow_ms=300.0, seed=0)
     with mk_engine(chaos=chaos, hedge_after_ms=20.0) as eng:
         eng.register("k", x, prewarm=False)
-        eng.query("k", pool[:8])            # compile both replicas
+        eng.query(_req("k", pool[:8]))            # compile both replicas
         for i in range(6):
-            ans = eng.query("k", pool[:8])
+            ans = eng.query(_req("k", pool[:8]))
             assert not ans.degraded
         assert eng.stats["hedges"] > 0
         assert eng.stats["hedge_wins"] > 0
@@ -174,7 +180,7 @@ def test_real_bug_propagates_not_retried(data):
         for r in range(table.n_replicas):
             table.engines[0][r].query = boom
         with pytest.raises(ZeroDivisionError, match="real bug"):
-            eng.query("k", jnp.zeros((4, D)))
+            eng.query(_req("k", jnp.zeros((4, D))))
 
 
 # -- graceful degradation ------------------------------------------------------
@@ -187,7 +193,7 @@ def test_total_shard_loss_yields_certified_answer(data):
                    degraded_accuracy=10.0) as eng:
         table = eng.register("k", x, prewarm=False)
         y = pool[:16]
-        ans = eng.query("k", y)
+        ans = eng.query(_req("k", y))
         assert ans.degraded and ans.missing_shards == (1,)
         assert ans.live_shards == (0,)
         oracle = np.asarray(ref.sdkde_eval(x, y, table.h, block=256),
@@ -200,7 +206,7 @@ def test_total_shard_loss_yields_certified_answer(data):
         assert ans.rel_err_bound == pytest.approx(bounds.max())
         # and the caller asked for exactness -> typed refusal instead
         with pytest.raises(ServeError):
-            eng.query("k", y, allow_degraded=False)
+            eng.query(_req("k", y, allow_degraded=False))
 
 
 def test_uncertifiable_degradation_is_refused(data):
@@ -210,7 +216,7 @@ def test_uncertifiable_degradation_is_refused(data):
                    degraded_accuracy=1e-6) as eng:
         eng.register("k", x, prewarm=False)
         with pytest.raises(Degraded) as ei:
-            eng.query("k", pool[:8])
+            eng.query(_req("k", pool[:8]))
         assert ei.value.bound > ei.value.target == 1e-6
         assert eng.stats["dropped"] == 1
 
@@ -223,7 +229,7 @@ def test_deadline_exceeded_is_typed(data):
     with mk_engine() as eng:
         eng.register("k", x, prewarm=False)
         with pytest.raises(DeadlineExceeded):
-            eng.query("k", pool[:8], deadline_ms=1e-6)
+            eng.query(_req("k", pool[:8], deadline_s=1e-9))
         assert isinstance(DeadlineExceeded("x"), TimeoutError)
 
 
@@ -232,18 +238,18 @@ def test_deadline_misses_trigger_tier_shedding(data):
     with mk_engine(shed_after_misses=2, shed_requests=3,
                    shed_accuracy=5e-2) as eng:
         eng.register("k", x, prewarm=False)
-        eng.query("k", pool[:8])                       # healthy baseline
+        eng.query(_req("k", pool[:8]))                       # healthy baseline
         for _ in range(2):
             with pytest.raises(DeadlineExceeded):
-                eng.query("k", pool[:8], deadline_ms=1e-6)
-        ans = eng.query("k", pool[:8])
+                eng.query(_req("k", pool[:8], deadline_s=1e-9))
+        ans = eng.query(_req("k", pool[:8]))
         assert ans.shed and ans.precision == "bf16"    # ladder downgrade
         # explicit precision overrides the shed tier
-        ans = eng.query("k", pool[:8], precision="f32")
+        ans = eng.query(_req("k", pool[:8], precision="f32"))
         assert ans.precision == "f32"
         # the episode ends after shed_requests
-        eng.query("k", pool[:8])
-        ans = eng.query("k", pool[:8])
+        eng.query(_req("k", pool[:8]))
+        ans = eng.query(_req("k", pool[:8]))
         assert not ans.shed
 
 
@@ -251,13 +257,13 @@ def test_unknown_key_and_bad_request(data):
     x, _ = data
     with mk_engine() as eng:
         with pytest.raises(UnknownKey):
-            eng.query("nope", jnp.zeros((2, D)))
+            eng.query(_req("nope", jnp.zeros((2, D))))
         assert isinstance(UnknownKey("k"), KeyError)
         eng.register("k", x, prewarm=False)
         with pytest.raises(BadRequest):
-            eng.query("k", jnp.zeros((2, D + 1)))      # wrong dim
+            eng.query(_req("k", jnp.zeros((2, D + 1))))      # wrong dim
         with pytest.raises(BadRequest):
-            eng.query("k", jnp.zeros((0, D)))          # empty batch
+            eng.query(_req("k", jnp.zeros((0, D))))          # empty batch
 
 
 def test_overloaded_when_no_live_replica(data):
@@ -266,7 +272,7 @@ def test_overloaded_when_no_live_replica(data):
     with mk_engine(chaos=chaos, max_retries=0, allow_degraded=False) as eng:
         eng.register("k", x, prewarm=False)
         with pytest.raises(Overloaded):
-            eng.query("k", pool[:8])
+            eng.query(_req("k", pool[:8]))
 
 
 def test_fenced_but_alive_shard_served_as_last_resort(data):
@@ -276,10 +282,10 @@ def test_fenced_but_alive_shard_served_as_last_resort(data):
     x, pool = data
     with mk_engine() as eng:
         table = eng.register("k", x, prewarm=False)
-        want = np.asarray(eng.query("k", pool[:8]).densities)
+        want = np.asarray(eng.query(_req("k", pool[:8])).value)
         R = table.n_replicas
         eng.supervisor.fence(range(R))           # all of shard 0
-        ans = eng.query("k", pool[:8])
+        ans = eng.query(_req("k", pool[:8]))
         np.testing.assert_allclose(np.asarray(ans.densities), want,
                                    rtol=1e-6)
         assert not ans.degraded and ans.missing_shards == ()

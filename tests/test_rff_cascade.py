@@ -1,0 +1,209 @@
+"""RFF fast tier + accuracy cascade (kernels/flash_rff.py, serve/cascade.py).
+
+The contract under test, end to end:
+
+  * the certified band dominates the realized error against an exact
+    reference on every query, across seeds and shapes (the certificate
+    the cascade routes on);
+  * a loose ``accuracy_target`` resolves at the RFF tier, a tight one
+    escalates to the exact kernel, and escalated rows are bit-identical
+    to the exact path;
+  * precision pins beat the cascade in both directions (``"rff"`` forces
+    the fast tier, an exact pin skips it);
+  * fused ``query_many`` members gate per member;
+  * streaming generation flips keep RFF answers certified against the
+    *updated* live set (incremental feature-sum sync, no refit).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import kde as ref
+from repro.core.mixtures import mixture_for_dim
+from repro.kernels import flash_rff
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
+
+D2 = 2
+
+
+def _sample(n, d, seed=0, queries=64):
+    mix = mixture_for_dim(d)
+    key = jax.random.PRNGKey(seed)
+    x = np.asarray(mix.sample(key, n), np.float32)
+    y = np.asarray(mix.sample(jax.random.fold_in(key, 7), queries),
+                   np.float32)
+    return x, y
+
+
+def _engine(x, h=0.4, **kw):
+    base = dict(backend="jnp", method="kde", rff="on", rff_features=512,
+                rff_pilot=32, min_batch=16, max_batch=128)
+    base.update(kw)
+    eng = ServeEngine(ServeConfig(**base))
+    eng.register("ds", x, h=h)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# The certificate: band dominates realized error.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,d", [(2048, 2), (2048, 4), (4096, 3)])
+def test_band_dominates_realized_error(n, d, seed):
+    x, y = _sample(n, d, seed=seed, queries=128)
+    h = 0.5
+    st = flash_rff.fit(x, h, n_features=2048, n_pilot=64, seed=seed)
+    p, band = flash_rff.eval_density(st.serving(), y)
+    p, band = np.asarray(p, np.float64), np.asarray(band, np.float64)
+    assert (p >= 0.0).all() and (band > 0.0).all()
+    want = np.asarray(ref.kde_eval(x, y, h, block=1024), np.float64)
+    realized = flash_rff.realized_error(p, want, st.p_scale)
+    assert float((realized - band).max()) <= 0.0, (
+        f"certified band violated by {float((realized - band).max()):.2e}")
+
+
+def test_modeled_cost_monotone_in_features():
+    lo = flash_rff.modeled_query_cost_us(1024, 4, n_features=2048)
+    hi = flash_rff.modeled_query_cost_us(1024, 4, n_features=8192)
+    assert 0.0 < lo < hi
+    # the pilot pass adds cost once it stops being noise
+    assert flash_rff.modeled_query_cost_us(
+        1024, 4, n_features=2048, n_pilot=1024) > lo
+
+
+# ---------------------------------------------------------------------------
+# Cascade routing through the engine.
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_answers_on_loose_target():
+    x, y = _sample(1024, D2)
+    eng = _engine(x)
+    ans = eng.query(QueryRequest(key="ds", points=y, accuracy_target=10.0))
+    assert ans.rff_hits == y.shape[0] and ans.escalated == 0
+    assert ans.path == ("rff",) and ans.tier == "rff"
+    # the answered rows carry the band, and the band fits the target
+    assert ans.rel_err_bounds is not None
+    assert float(ans.rel_err_bounds.max()) <= 10.0
+    want = np.asarray(ref.kde_eval(x, y, 0.4, block=1024), np.float64)
+    state = eng.registry.get("ds").rff.state
+    realized = flash_rff.realized_error(
+        np.asarray(ans.value, np.float64), want, state.p_scale)
+    assert float((realized - np.asarray(ans.rel_err_bounds)).max()) <= 0.0
+
+
+def test_cascade_escalates_on_tight_target():
+    x, y = _sample(1024, D2)
+    eng = _engine(x)
+    ans = eng.query(QueryRequest(key="ds", points=y,
+                                 accuracy_target=1e-9))
+    assert ans.rff_hits == 0 and ans.escalated == y.shape[0]
+    assert ans.path[-1] == "f32"
+    # escalated rows ARE the exact path
+    want = eng.query(QueryRequest(key="ds", points=y, precision="f32"))
+    np.testing.assert_array_equal(np.asarray(ans.value),
+                                  np.asarray(want.value))
+
+
+def test_rff_pin_forces_fast_tier():
+    x, y = _sample(1024, D2)
+    eng = _engine(x)
+    # the pin IS the routing decision: even an impossible target doesn't
+    # escalate a pinned request
+    ans = eng.query(QueryRequest(key="ds", points=y, precision="rff",
+                                 accuracy_target=1e-9))
+    assert ans.tier == "rff" and ans.escalated == 0
+    assert ans.rff_hits == y.shape[0]
+
+
+def test_exact_pin_skips_cascade():
+    x, y = _sample(1024, D2)
+    eng = _engine(x)
+    ans = eng.query(QueryRequest(key="ds", points=y, precision="f32",
+                                 accuracy_target=10.0))
+    assert ans.tier == "f32" and ans.rff_hits == 0
+    assert ans.path == ("f32",)
+
+
+def test_rff_pin_raises_when_tier_disabled():
+    x, y = _sample(512, D2)
+    eng = _engine(x, rff="off")
+    from repro.serve.engine import BadRequest
+    with pytest.raises(BadRequest, match="rff"):
+        eng.query(QueryRequest(key="ds", points=y, precision="rff"))
+
+
+def test_query_many_gates_per_member():
+    x, y = _sample(1024, D2, queries=96)
+    eng = _engine(x)
+    reqs = [
+        QueryRequest(key="ds", points=y[:32], accuracy_target=10.0),
+        QueryRequest(key="ds", points=y[32:64], accuracy_target=1e-9),
+        QueryRequest(key="ds", points=y[64:]),     # no target: exact
+    ]
+    loose, tight, plain = eng.query_many(reqs)
+    assert loose.rff_hits == 32 and loose.escalated == 0
+    assert tight.rff_hits == 0 and tight.escalated == 32
+    assert plain.rff_hits == 0
+    want = np.asarray(
+        eng.query(QueryRequest(key="ds", points=y[32:64],
+                               precision="f32")).value)
+    np.testing.assert_array_equal(np.asarray(tight.value), want)
+
+
+def test_cascade_counters_and_band_histogram():
+    x, y = _sample(1024, D2)
+    eng = _engine(x)
+
+    def val(name):
+        m = obs.metrics_snapshot().get(name)
+        return m["value"] if m else 0
+
+    hits0, esc0 = val("serve.cascade_hits"), val("serve.cascade_escalations")
+    eng.query(QueryRequest(key="ds", points=y, accuracy_target=10.0))
+    eng.query(QueryRequest(key="ds", points=y, accuracy_target=1e-9))
+    assert val("serve.cascade_hits") == hits0 + y.shape[0]
+    assert val("serve.cascade_escalations") == esc0 + y.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming: generation flips keep the fast tier certified.
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_generation_flip_keeps_rff_certified():
+    x, y = _sample(2048, D2)
+    h = 0.4
+    eng = _engine(x, h=h, stream=True, rff_features=1024, rff_pilot=32)
+
+    def syncs():
+        m = obs.metrics_snapshot().get("rff.incremental_syncs")
+        return m["value"] if m else 0
+
+    ans0 = eng.query(QueryRequest(key="ds", points=y,
+                                  accuracy_target=10.0))
+    assert ans0.rff_hits == y.shape[0]
+
+    before = syncs()
+    mix = mixture_for_dim(D2)
+    fresh = np.asarray(mix.sample(jax.random.PRNGKey(99), 64), np.float32)
+    eng.registry.slide("ds", fresh)       # append batch + evict oldest
+    ans1 = eng.query(QueryRequest(key="ds", points=y,
+                                  accuracy_target=10.0))
+    assert ans1.rff_hits == y.shape[0]
+    assert syncs() == before + 1          # delta sync, not a refit
+
+    # certified against the UPDATED live set, not the fit-time one
+    st = eng.registry.get("ds").stream
+    st.ensure(0)
+    want = np.asarray(ref.kde_eval(st.x, y, h, block=1024), np.float64)
+    state = eng.registry.get("ds").rff.state
+    realized = flash_rff.realized_error(
+        np.asarray(ans1.value, np.float64), want, state.p_scale)
+    assert float((realized - np.asarray(ans1.rel_err_bounds)).max()) <= 0.0
+    # and the flip actually moved the answer (the live set changed)
+    assert not np.allclose(np.asarray(ans0.value), np.asarray(ans1.value))

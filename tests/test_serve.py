@@ -12,6 +12,7 @@ import pytest
 from repro.core import kde as ref
 from repro.serve import (
     EstimatorRegistry,
+    QueryRequest,
     ServeConfig,
     ServeEngine,
     ShapeBucketCache,
@@ -19,6 +20,11 @@ from repro.serve import (
     pad_queries,
     split,
 )
+
+
+def _q(eng, key, y, **kw):
+    """One typed query, densities out."""
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
 
 N, D, H = 384, 8, 0.6
 
@@ -86,7 +92,7 @@ def test_ragged_batches_match_reference(data, backend, method):
               "laplace": ref.laplace_kde_eval}[method]
     want = np.asarray(ref_fn(x, y, H, block=128))
     for m in (1, 7, 16, 33, 128):      # spans buckets incl. exact fits
-        got = np.asarray(eng.query("ds", y[:m]))
+        got = np.asarray(_q(eng, "ds", y[:m]))
         assert got.shape == (m,)
         np.testing.assert_allclose(got, want[:m], rtol=1e-5,
                                    atol=1e-6 * want.max())
@@ -96,7 +102,7 @@ def test_oversize_batch_chunks_at_largest_bucket(data):
     x, y = data
     eng = ServeEngine(_cfg())          # max bucket 128 < 300 queries
     eng.register("ds", x, h=H)
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     want = np.asarray(ref.sdkde_eval(x, y, H, block=128))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * want.max())
 
@@ -105,7 +111,9 @@ def test_query_many_coalesces_to_one_dispatch(data):
     x, y = data
     eng = ServeEngine(_cfg(backend="pallas", method="kde"))
     eng.register("ds", x, h=H)
-    outs = eng.query_many("ds", [y[:3], y[3:50], y[50:61]])
+    outs = [a.value for a in eng.query_many(
+        [QueryRequest(key="ds", points=q)
+         for q in (y[:3], y[3:50], y[50:61])])]
     assert [o.shape[0] for o in outs] == [3, 47, 11]
     want = np.asarray(ref.kde_eval(x, y[:61], H, block=128))
     np.testing.assert_allclose(np.asarray(jnp.concatenate(outs)), want,
@@ -142,13 +150,13 @@ def test_shape_bucket_cache_hits_and_eviction(data):
     x, y = data
     eng = ServeEngine(_cfg(cache_buckets=2))
     eng.register("ds", x, h=H)
-    eng.query("ds", y[:5])             # bucket 16: miss (compile)
-    eng.query("ds", y[:9])             # bucket 16: hit
-    eng.query("ds", y[:20])            # bucket 32: miss
+    _q(eng, "ds", y[:5])             # bucket 16: miss (compile)
+    _q(eng, "ds", y[:9])             # bucket 16: hit
+    _q(eng, "ds", y[:20])            # bucket 32: miss
     assert (eng.cache.hits, eng.cache.misses) == (1, 2)
-    eng.query("ds", y[:40])            # bucket 64: miss -> evicts LRU (16)
+    _q(eng, "ds", y[:40])            # bucket 64: miss -> evicts LRU (16)
     assert eng.cache.evictions == 1 and len(eng.cache) == 2
-    eng.query("ds", y[:9])             # bucket 16 again: rebuilt (miss)
+    _q(eng, "ds", y[:9])             # bucket 16 again: rebuilt (miss)
     assert eng.cache.misses == 4
 
 
@@ -156,9 +164,9 @@ def test_refit_invalidates_bucket_executables(data):
     x, y = data
     eng = ServeEngine(_cfg())
     eng.register("ds", x, h=H)
-    stale = np.asarray(eng.query("ds", y[:8]))
+    stale = np.asarray(_q(eng, "ds", y[:8]))
     eng.register("ds", 2.0 + x, h=H, refit=True)   # dataset moved
-    fresh = np.asarray(eng.query("ds", y[:8]))
+    fresh = np.asarray(_q(eng, "ds", y[:8]))
     want = np.asarray(ref.sdkde_eval(2.0 + x, y[:8], H, block=128))
     np.testing.assert_allclose(fresh, want, rtol=1e-5,
                                atol=1e-6 * want.max())
@@ -172,10 +180,10 @@ def test_evict_and_reregister_never_serves_stale_executables(data):
     x, y = data
     eng = ServeEngine(_cfg())
     eng.register("ds", x, h=H)
-    stale = np.asarray(eng.query("ds", y[:8]))
+    stale = np.asarray(_q(eng, "ds", y[:8]))
     eng.registry.evict("ds")
     eng.register("ds", 2.0 + x, h=H)       # no refit flag, no invalidate
-    fresh = np.asarray(eng.query("ds", y[:8]))
+    fresh = np.asarray(_q(eng, "ds", y[:8]))
     want = np.asarray(ref.sdkde_eval(2.0 + x, y[:8], H, block=128))
     np.testing.assert_allclose(fresh, want, rtol=1e-5,
                                atol=1e-6 * want.max())
@@ -210,7 +218,7 @@ def test_planned_config_matches_explicit_knobs(data, tier):
     prep = ep.register("ds", x, h=H)
     assert prep.plan is not None
     assert prep.config.precision == tier  # override precedence held
-    got_p = np.asarray(ep.query("ds", y[:100]))
+    got_p = np.asarray(_q(ep, "ds", y[:100]))
 
     explicit = ServeConfig(
         backend="pallas", method="sdkde", interpret=True,
@@ -220,7 +228,7 @@ def test_planned_config_matches_explicit_knobs(data, tier):
     )
     ee = ServeEngine(explicit)
     ee.register("ds", x, h=H)
-    got_e = np.asarray(ee.query("ds", y[:100]))
+    got_e = np.asarray(_q(ee, "ds", y[:100]))
     np.testing.assert_allclose(got_p, got_e, rtol=1e-5,
                                atol=1e-8 * float(np.max(got_e)))
 
@@ -232,7 +240,7 @@ def test_planned_estimator_still_matches_reference(data):
         min_batch=16, max_batch=128,
     ))
     eng.register("ds", x, h=H)
-    got = np.asarray(eng.query("ds", y[:64]))
+    got = np.asarray(_q(eng, "ds", y[:64]))
     want = np.asarray(ref.sdkde_eval(x, y[:64], H, block=128))
     np.testing.assert_allclose(got, want, rtol=1e-5,
                                atol=1e-6 * float(want.max()))

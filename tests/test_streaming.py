@@ -18,8 +18,13 @@ import jax.numpy as jnp
 from repro.core import kde as ref
 from repro.core.estimator import SDKDE, EstimatorConfig
 from repro.kernels import ops, spatial
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QueryRequest, ServeConfig, ServeEngine
 from repro.stream import StreamConfig, StreamingSDKDE, delta
+
+
+def _q(eng, key, y, **kw):
+    """One typed query, densities out."""
+    return eng.query(QueryRequest(key=key, points=y, **kw)).value
 
 D, H = 4, 0.5
 
@@ -195,7 +200,7 @@ def test_interleaved_updates_match_refit_exact_pruning(data):
     eng.registry.append("ds", xa[32:])
     eng.registry.evict_ids("ds", np.arange(16))       # oldest originals
     eng.registry.append("ds", xa[:4])                 # duplicates are fine
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     live = np.concatenate([x[16:], xa[8:32], xa[32:], xa[:4]])
     want = _refit_eval(live, y)
     np.testing.assert_allclose(got, want, rtol=1e-5,
@@ -216,7 +221,7 @@ def test_streaming_matches_refit_across_precision_tiers(data, tier, rtol,
     eng.register("ds", x, h=H)
     ids = eng.registry.append("ds", xa)
     eng.registry.evict_ids("ds", ids[::2])
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     live = np.concatenate([x, xa[1::2]])
     want = _refit_eval(live, y)
     np.testing.assert_allclose(got, want, rtol=rtol,
@@ -229,7 +234,7 @@ def test_streaming_methods_without_stats(data, method):
     eng = ServeEngine(_serve_cfg(method=method))
     eng.register("ds", x, h=H)
     eng.registry.slide("ds", xa)          # sliding window: append + evict
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     live = np.concatenate([x[len(xa):], xa])
     want = _refit_eval(live, y, method)
     np.testing.assert_allclose(got, want, rtol=1e-5,
@@ -240,13 +245,13 @@ def test_staleness_budget_serves_stale_then_flushes(data):
     x, xa, y = data
     eng = ServeEngine(_serve_cfg(staleness_budget=2))
     eng.register("ds", x, h=H)
-    q0 = np.asarray(eng.query("ds", y))
+    q0 = np.asarray(_q(eng, "ds", y))
     eng.registry.append("ds", xa[:16])                 # gen 1
-    q1 = np.asarray(eng.query("ds", y))                # within budget
+    q1 = np.asarray(_q(eng, "ds", y))                # within budget
     np.testing.assert_array_equal(q0, q1)              # stale gen served
     eng.registry.append("ds", xa[16:32])               # gen 2
     eng.registry.append("ds", xa[32:])                 # gen 3 > budget
-    q2 = np.asarray(eng.query("ds", y))                # must flush
+    q2 = np.asarray(_q(eng, "ds", y))                # must flush
     want = _refit_eval(np.concatenate([x, xa]), y)
     np.testing.assert_allclose(q2, want, rtol=1e-5,
                                atol=1e-6 * float(want.max()))
@@ -260,16 +265,16 @@ def test_value_generations_reuse_executables_rebuild_invalidates(data):
     x, xa, y = data
     eng = ServeEngine(_serve_cfg())
     eng.register("ds", x, h=H)
-    eng.query("ds", y[:16])
+    _q(eng, "ds", y[:16])
     misses0 = eng.cache.misses
     eng.registry.append("ds", xa[:8])     # slack absorbs it: same epoch
-    eng.query("ds", y[:16])
+    _q(eng, "ds", y[:16])
     assert eng.cache.misses == misses0    # same compiled executable served
     st = eng.registry.get("ds").stream
     epoch0 = st.snapshot().layout_epoch
     # force a rebuild through the policy and confirm new executables
     eng.registry.append("ds", np.repeat(xa, 20, axis=0))   # > append budget
-    eng.query("ds", y[:16])
+    _q(eng, "ds", y[:16])
     assert st.snapshot().layout_epoch > epoch0
     assert eng.cache.misses > misses0
 
@@ -281,7 +286,7 @@ def test_slack_overflow_triggers_rebuild_and_stays_correct(data):
     eng.register("ds", x[:128], h=H)
     big = np.concatenate([x[128:], xa])
     eng.registry.append("ds", big)                    # overflows the slack
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     st = eng.registry.get("ds").stream
     assert st.rebuilds >= 1
     assert st.last_rebuild_reason == "slack-overflow"
@@ -453,7 +458,7 @@ def test_registry_evict_during_inflight_queries(data):
     def worker():
         for _ in range(20):
             try:
-                results.append(np.asarray(eng.query("ds", y[:16])))
+                results.append(np.asarray(_q(eng, "ds", y[:16])))
             except KeyError:
                 pass
             except Exception as e:  # noqa: BLE001
@@ -496,7 +501,7 @@ def test_point_evict_during_pinned_snapshot_is_consistent(data):
     assert pinned.n_live == x.shape[0]
     # and the live snapshot reflects the round-trip back to x
     want = _refit_eval(x, y)
-    got = np.asarray(eng.query("ds", y))
+    got = np.asarray(_q(eng, "ds", y))
     np.testing.assert_allclose(got, want, rtol=1e-5,
                                atol=1e-6 * float(want.max()))
 
@@ -507,11 +512,11 @@ def test_stream_refit_bumps_generation_and_invalidates(data):
     x, xa, y = data
     eng = ServeEngine(_serve_cfg(method="kde"))
     eng.register("ds", x, h=H)
-    stale = np.asarray(eng.query("ds", y[:16]))
+    stale = np.asarray(_q(eng, "ds", y[:16]))
     gen0 = eng.registry.get("ds").generation
     eng.register("ds", 2.0 + x, h=H, refit=True)
     assert eng.registry.get("ds").generation != gen0
-    fresh = np.asarray(eng.query("ds", y[:16]))
+    fresh = np.asarray(_q(eng, "ds", y[:16]))
     want = _refit_eval(2.0 + x, y[:16], "kde")
     np.testing.assert_allclose(fresh, want, rtol=1e-5,
                                atol=1e-6 * float(want.max()))
@@ -549,15 +554,15 @@ def test_planned_stream_matches_explicit_across_generation_flip(data, tier):
     ee = ServeEngine(explicit)
     ee.register("ds", x, h=H)
 
-    before_p = np.asarray(ep.query("ds", y[:64]))
-    before_e = np.asarray(ee.query("ds", y[:64]))
+    before_p = np.asarray(_q(ep, "ds", y[:64]))
+    before_e = np.asarray(_q(ee, "ds", y[:64]))
     np.testing.assert_allclose(before_p, before_e, rtol=1e-5,
                                atol=1e-8 * float(np.max(before_e)))
 
     ep.registry.append("ds", xa)          # generation flip on both
     ee.registry.append("ds", xa)
-    after_p = np.asarray(ep.query("ds", y[:64]))
-    after_e = np.asarray(ee.query("ds", y[:64]))
+    after_p = np.asarray(_q(ep, "ds", y[:64]))
+    after_e = np.asarray(_q(ee, "ds", y[:64]))
     np.testing.assert_allclose(after_p, after_e, rtol=1e-5,
                                atol=1e-8 * float(np.max(after_e)))
     assert not np.allclose(before_p, after_p)   # the flip actually served
